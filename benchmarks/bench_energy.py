@@ -1,0 +1,30 @@
+"""Paper future-work extension: energy-aware HEFT_RT Pareto frontier."""
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.heft_energy import energy_pareto
+from repro.runtime.apps import get_app, paper_soc_pe_types
+
+
+def run():
+    rows = []
+    # the paper's SoC: FFT accelerator is fast AND efficient for FFTs;
+    # power model: A53 ≈ 1.0 W-unit, FFT IP ≈ 0.3
+    app = get_app("PD")
+    ex = app.exec_matrix(paper_soc_pe_types())
+    finite = np.where(np.isfinite(ex), ex, np.nan)
+    avg = np.nanmean(finite, axis=1)
+    power = np.array([1.0, 1.0, 1.0, 0.3])
+    for lam, makespan, energy in energy_pareto(avg, ex, power):
+        rows.append((f"energy_pareto_lam{lam}", makespan * 1e3,
+                     f"energy={energy:.3f}W*ms"))
+    pts = energy_pareto(avg, ex, power)
+    rows.append(("energy_saving_at_max_lambda_pct",
+                 (1 - pts[-1][2] / pts[0][2]) * 100,
+                 f"makespan_cost={((pts[-1][1]/pts[0][1])-1)*100:.1f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,35 @@
+"""Fig 4: scheduling overhead vs ready-queue size; crossover; 183x / 2.6x."""
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import heft_rt_numpy
+from repro.runtime import hw_compute_s, hw_overhead_s, hw_transfer_s, sw_overhead_s
+
+
+def run():
+    rows = []
+    for n in [1, 2, 5, 10, 25, 50, 100, 250, 500, 1000, 1330]:
+        rows.append((f"fig4_sw_n{n}", sw_overhead_s(n) * 1e6, "modeled_sw"))
+        rows.append((f"fig4_hw_n{n}", hw_overhead_s(n) * 1e6,
+                     f"compute={hw_compute_s(n)*1e6:.3f}us;"
+                     f"xfer={hw_transfer_s(n)*1e6:.3f}us"))
+    # crossover point
+    cross = next(n for n in range(1, 100)
+                 if sw_overhead_s(n) > hw_overhead_s(n))
+    rows.append(("fig4_crossover_queue_size", cross, "paper=5..6"))
+    rows.append(("fig4_speedup_compute_only_n1330",
+                 sw_overhead_s(1330) / hw_compute_s(1330), "paper=183x"))
+    rows.append(("fig4_speedup_end_to_end_n1330",
+                 sw_overhead_s(1330) / hw_overhead_s(1330), "paper=2.6x"))
+    # measured software scheduler on this host for scale reference
+    rng = np.random.default_rng(0)
+    for n in [100, 1330]:
+        us = time_call(heft_rt_numpy, rng.uniform(0.1, 5, n),
+                       rng.uniform(0.1, 5, (n, 4)), np.zeros(4), repeats=3)
+        rows.append((f"fig4_measured_numpy_sw_n{n}", us, "this_host"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,110 @@
+"""Roofline analysis — deliverable (g).
+
+Per (arch × shape × mesh) cell, from the dry-run compiled artifact:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs          [s]
+  memory term     = HLO_bytes_per_device / HBM_bw              [s]
+  collective term = wire_bytes_per_device / ICI_link_bw        [s]
+
+(Cost analysis on the partitioned module is per-device, so the formula's
+"/ chips" is already applied; a single effective ICI link per device is a
+conservative lower bound on fabric bandwidth.)
+
+Also reported: dominant term, MODEL_FLOPS = {6,2}·N_active·tokens, the
+useful-flops ratio MODEL_FLOPS / (HLO_FLOPs·chips) (remat/padding waste
+shows up here), and the roofline fraction = compute / max(all terms) —
+the fraction of ideal compute throughput achievable at perfect overlap.
+
+Writes experiments/roofline.csv for EXPERIMENTS.md §Roofline.
+"""
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.models.config import SHAPES
+from repro.models.model import model_flops
+
+PEAK_FLOPS = 197e12      # bf16 / chip (v5e-class)
+HBM_BW = 819e9           # B/s per chip
+LINK_BW = 50e9           # B/s per ICI link
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                   "artifacts", "dryrun")
+
+
+def analyze(d: dict) -> dict | None:
+    if "error" in d or "weighted" not in d:
+        return None
+    shape = SHAPES[d["shape"]]
+    cfg = get_config(d["arch"])
+    chips = d["num_devices"]
+    w = d["weighted"]                        # trip-count-weighted per-device
+    t_c = w["dot_flops_per_device"] / PEAK_FLOPS
+    # memory term: matmul operand/result streams (+ params resident reads are
+    # included — weights are dot operands); elementwise fusions add ~O(1)×
+    # activation traffic on top, documented in EXPERIMENTS.md §Roofline.
+    t_m = w["dot_bytes_per_device"] / HBM_BW
+    t_x = w["total_wire_bytes_per_device"] / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mf = model_flops(cfg, tokens, train=shape.kind == "train")
+    useful = mf / max(w["dot_flops_per_device"] * chips, 1.0)
+    frac = t_c / max(t_c, t_m, t_x)
+    return {
+        "cell": f"{d['arch']}×{d['shape']}×{d['mesh']}"
+                + (f"[{d['variant']}]" if d.get("variant") else ""),
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom[0], "roofline_fraction": frac,
+        "useful_flops_ratio": useful,
+        "temp_gb": (d["memory"]["temp_size_in_bytes"] or 0) / 1e9,
+        "arg_gb": (d["memory"]["argument_size_in_bytes"] or 0) / 1e9,
+    }
+
+
+def run():
+    rows = []
+    table = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        # hillclimb variant artifacts carry a suffix beyond _single/_multi
+        stem = os.path.basename(path)[:-5]
+        for mesh_tag in ("_single", "_multi"):
+            if mesh_tag in stem:
+                suffix = stem.split(mesh_tag, 1)[1].lstrip("_")
+                if suffix:
+                    d["variant"] = suffix
+        a = analyze(d)
+        if a is None:
+            rows.append((f"roofline_{os.path.basename(path)[:-5]}", "ERROR",
+                         d.get("error", "")[:80]))
+            continue
+        table.append(a)
+        rows.append((f"roofline_{a['cell']}", a["compute_s"] * 1e3,
+                     f"mem={a['memory_s']*1e3:.2f}ms;"
+                     f"coll={a['collective_s']*1e3:.2f}ms;"
+                     f"dom={a['dominant']};"
+                     f"frac={a['roofline_fraction']:.3f};"
+                     f"useful={a['useful_flops_ratio']:.3f}"))
+    # CSV for EXPERIMENTS.md
+    out = os.path.join(ART, "..", "..", "roofline.csv")
+    with open(out, "w") as f:
+        f.write("cell,compute_ms,memory_ms,collective_ms,dominant,"
+                "roofline_fraction,useful_flops_ratio,temp_gb,arg_gb\n")
+        for a in table:
+            f.write(f"{a['cell']},{a['compute_s']*1e3:.3f},"
+                    f"{a['memory_s']*1e3:.3f},{a['collective_s']*1e3:.3f},"
+                    f"{a['dominant']},{a['roofline_fraction']:.4f},"
+                    f"{a['useful_flops_ratio']:.4f},{a['temp_gb']:.2f},"
+                    f"{a['arg_gb']:.2f}\n")
+    rows.append(("roofline_cells_analyzed", len(table), f"csv={out}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,28 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark module exposes ``run() -> list[row]`` where a row is
+``(name, us_per_call, derived)`` — printed as CSV by benchmarks/run.py.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def time_call(fn, *args, repeats: int = 5, warmup: int = 1, **kw) -> float:
+    """Median wall-clock microseconds per call."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(rows: list) -> None:
+    for name, us, derived in rows:
+        us_s = f"{us:.3f}" if isinstance(us, (int, float)) else str(us)
+        print(f"{name},{us_s},{derived}")

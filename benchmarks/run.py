@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure + beyond-paper.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+
+  bench_cycle_model              Section VI-A complexity / 9.144 ns claim
+  bench_resource_model           Tables II, III, IV
+  bench_latency_vs_queue         Fig 4 (+183x, +2.6x, crossover)
+  bench_functional_verification  Fig 3
+  bench_exec_vs_injection        Fig 5 (31.7% claim)
+  bench_frame_rate               Fig 6 (26.7% claim)
+  bench_serve_scheduler          beyond-paper: LLM serving fleet
+  bench_expert_placement         beyond-paper: MoE expert rebalancing
+  bench_energy                   paper future-work: energy-aware HEFT_RT
+  bench_roofline                 deliverable (g): per-cell roofline terms
+"""
+
+import importlib
+import sys
+import time
+
+MODULES = [
+    "bench_cycle_model",
+    "bench_resource_model",
+    "bench_latency_vs_queue",
+    "bench_functional_verification",
+    "bench_exec_vs_injection",
+    "bench_frame_rate",
+    "bench_serve_scheduler",
+    "bench_expert_placement",
+    "bench_energy",
+    "bench_roofline",
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name in MODULES:
+        if only and only not in name:
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        rows = mod.run()
+        for r in rows:
+            n, us, derived = r
+            us_s = f"{us:.3f}" if isinstance(us, (int, float)) else str(us)
+            print(f"{n},{us_s},{derived}")
+        print(f"_bench_wall_s_{name},{time.time()-t0:.1f},-")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""§Perf hillclimb runner: lower a cell under a policy/flag variant, print the
+three roofline terms next to the baseline, append to the iteration log.
+
+  PYTHONPATH=src python experiments/hillclimb.py <arch> <shape> <variant>
+
+Variants are registered below: each is (description, kwargs for dryrun_cell)
+or a policy-transform function.  Results cache under
+experiments/artifacts/dryrun/<cell>_<variant>.json.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion,convert-mover "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import json      # noqa: E402
+import sys       # noqa: E402
+
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config                     # noqa: E402
+from repro.dist.sharding import activation_hint_policy   # noqa: E402
+from repro.launch.dryrun import ARTIFACT_DIR, cell_path, dryrun_cell  # noqa: E402
+from repro.launch.mesh import mesh_axes                  # noqa: E402
+from repro.models.config import SHAPES                   # noqa: E402
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+
+def terms(d):
+    w = d["weighted"]
+    return (w["dot_flops_per_device"] / PEAK,
+            w["dot_bytes_per_device"] / HBM,
+            w["total_wire_bytes_per_device"] / LINK)
+
+
+def base_policy(arch, shape_name):
+    cfg = get_config(arch)
+    return dict(activation_hint_policy(cfg, mesh_axes(), SHAPES[shape_name]))
+
+
+# ---------------------------------------------------------------------------
+# variant registry: name → (description, fn(arch, shape) -> dryrun kwargs)
+# ---------------------------------------------------------------------------
+
+def v_sp_gather(arch, shape_name):
+    """Megatron-SP: gather activations over 'model' at each sublayer input;
+    matmuls then keep weights local (col/row parallel) and the boundary
+    constraint reduce-scatters the partial sums."""
+    pol = base_policy(arch, shape_name)
+    pol["sublayer_input"] = P("data", None, None)
+    return {"policy_override": pol}
+
+
+def v_no_fsdp(arch, shape_name):
+    """Replicate params over 'data' (TP-only): kills FSDP weight gathers —
+    decode cells are weight-gather-bound; fits when params/16 ≤ HBM."""
+    return {"fsdp": False}
+
+
+def v_sp_and_no_fsdp(arch, shape_name):
+    kw = v_sp_gather(arch, shape_name)
+    kw["fsdp"] = False
+    return kw
+
+
+def v_groups_data_only(arch, shape_name):
+    """MoE dispatch groups over 'data' only (bigger groups, less padding)."""
+    pol = base_policy(arch, shape_name)
+    pol["moe_groups"] = P("data", None, None)
+    pol["moe_groups4"] = P("data", None, None, None)
+    pol["__moe_groups__"] = SHAPES[shape_name].global_batch
+    return {"policy_override": pol}
+
+
+def v_qpos_attention(arch, shape_name):
+    """Attention sharded on QUERY POSITIONS instead of heads: head counts
+    8/10/24/56 pad over model=16 and GSPMD re-gathers the softmax carries on
+    every inner step (the dominant baseline collective).  One full-S q block
+    with S-over-model sharded q/carries is padding-free for every arch."""
+    pol = base_policy(arch, shape_name)
+    pol["attn_heads"] = P("data", "model", None, None)   # (B, S, H, hd)
+    pol["__attn_q_chunk__"] = "full"
+    return {"policy_override": pol}
+
+
+def v_qpos_sp(arch, shape_name):
+    kw = v_qpos_attention(arch, shape_name)
+    kw["policy_override"]["sublayer_input"] = P("data", None, None)
+    return kw
+
+
+def v_qpos_kvg(arch, shape_name):
+    """qpos + gather K/V once per layer (replicated over 'model' for the
+    kv-chunk scan) instead of a full re-gather per chunk step."""
+    kw = v_qpos_attention(arch, shape_name)
+    kw["policy_override"]["attn_kv"] = P("data", None, None, None)
+    return kw
+
+
+def v_qpos_kvg_sp(arch, shape_name):
+    kw = v_qpos_kvg(arch, shape_name)
+    kw["policy_override"]["sublayer_input"] = P("data", None, None)
+    return kw
+
+
+def v_qpos_nofsdp(arch, shape_name):
+    kw = v_qpos_attention(arch, shape_name)
+    kw["fsdp"] = False
+    return kw
+
+
+def v_qpos_kvg_tponly(arch, shape_name):
+    """qpos + kv gather + TP-only weights (no FSDP gathers at all); optimizer
+    moments stay 2D-sharded (data×model) — one param reshard per step."""
+    kw = v_qpos_kvg(arch, shape_name)
+    kw["fsdp"] = False
+    kw["opt_2d"] = True
+    return kw
+
+
+def v_qpos_kvg_expfsdp(arch, shape_name):
+    """qpos + kvg + FSDP restricted to expert tensors (attention/dense/router
+    weights TP-only — small enough replicated over data, so their per-layer
+    FSDP gathers disappear; experts keep ZeRO-3, which they need to fit)."""
+    kw = v_qpos_kvg(arch, shape_name)
+    kw["fsdp"] = False
+    kw["fsdp_experts_only"] = True
+    kw["opt_2d"] = True
+    return kw
+
+
+def v_flash_decode(arch, shape_name):
+    """Flash-decode: KV cache sharded on SEQUENCE over 'model' + TP-only
+    weights; per-layer collectives shrink to (B,H,1)-sized softmax/output
+    partials."""
+    pol = base_policy(arch, shape_name)
+    pol["attn_heads"] = P("data", None, None, None)   # q replicated over m
+    return {"policy_override": pol, "fsdp": False, "cache_seq_shard": True}
+
+
+VARIANTS = {
+    "sp": ("SP activation gather over model at sublayer inputs", v_sp_gather),
+    "nofsdp": ("TP-only params (no FSDP gathers)", v_no_fsdp),
+    "sp+nofsdp": ("SP + TP-only", v_sp_and_no_fsdp),
+    "moegroups-d": ("MoE groups over data only", v_groups_data_only),
+    "qpos": ("attention sharded on query positions (padding-free)",
+             v_qpos_attention),
+    "qpos+sp": ("qpos attention + SP sublayer inputs", v_qpos_sp),
+    "qpos+nofsdp": ("qpos attention + TP-only params", v_qpos_nofsdp),
+    "qpos+kvg": ("qpos + one-shot K/V gather per layer", v_qpos_kvg),
+    "qpos+kvg+sp": ("qpos + K/V gather + SP inputs", v_qpos_kvg_sp),
+    "qpos+kvg+tponly": ("qpos + K/V gather + TP-only weights (2D opt)",
+                        v_qpos_kvg_tponly),
+    "flashdecode": ("KV cache sharded on sequence + TP-only weights",
+                    v_flash_decode),
+    "qpos+kvg+expfsdp": ("qpos + kvg + FSDP on experts only",
+                         v_qpos_kvg_expfsdp),
+}
+
+
+def main():
+    arch, shape_name, variant = sys.argv[1], sys.argv[2], sys.argv[3]
+    desc, fn = VARIANTS[variant]
+    base_file = cell_path(arch.replace("-", "_").replace(".", "_"),
+                          shape_name, False)
+    # artifacts written by run_all use config module naming
+    if not os.path.exists(base_file):
+        base_file = os.path.join(ARTIFACT_DIR,
+                                 f"{arch}_{shape_name}_single.json")
+    base = json.load(open(base_file)) if os.path.exists(base_file) else None
+
+    kw = fn(arch, shape_name)
+    res = dryrun_cell(arch, shape_name, False, verbose=False, **kw)
+    out = cell_path(arch.replace("-", "_").replace(".", "_"), shape_name,
+                    False, tag=variant)
+    with open(out, "w") as f:
+        json.dump(res, f, indent=1)
+
+    tc, tm, tx = terms(res)
+    print(f"\n=== {arch} × {shape_name} × 16x16 — variant '{variant}' ===")
+    print(f"  {desc}")
+    if base and "weighted" in base:
+        bc, bm, bx = terms(base)
+        print(f"  compute   : {bc*1e3:10.1f} → {tc*1e3:10.1f} ms  ({tc/bc:5.2f}x)")
+        print(f"  memory    : {bm*1e3:10.1f} → {tm*1e3:10.1f} ms  ({tm/bm:5.2f}x)")
+        print(f"  collective: {bx*1e3:10.1f} → {tx*1e3:10.1f} ms  ({tx/bx:5.2f}x)")
+        f0 = bc / max(bc, bm, bx)
+        f1 = tc / max(tc, tm, tx)
+        print(f"  roofline fraction: {f0:.3f} → {f1:.3f}")
+    else:
+        print(f"  compute={tc*1e3:.1f}ms memory={tm*1e3:.1f}ms "
+              f"collective={tx*1e3:.1f}ms")
+    print(f"  temp/dev: {res['memory']['temp_size_in_bytes']/1e9:.1f} GB; "
+          f"args/dev: {res['memory']['argument_size_in_bytes']/1e9:.1f} GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+# The paper's primary contribution: HEFT_RT scheduling — software reference
+# (heft_rt), the hardware cycle/resource models that reproduce the paper's
+# latency and FPGA-cost claims, and the classic-HEFT quality baseline.
+from repro.core.heft_rt import (
+    ScheduleResult,
+    eft_assign,
+    heft_rt,
+    heft_rt_batched,
+    heft_rt_jit,
+    heft_rt_numpy,
+    priority_order,
+)
+from repro.core.heft_static import DAG, StaticSchedule, heft_static, upward_rank
+from repro.core.queue_model import (
+    CycleReport,
+    first_decision_worst_case,
+    hw_latency_ns,
+    oddeven_sort_cycles,
+    per_decision_latency_ns,
+    simulate_mapping_event,
+    worst_case_cycles,
+)
+from repro.core.resource_model import (
+    PAPER_CRITICAL_PATH_NS,
+    PAPER_DESIGN,
+    PAPER_PER_DECISION_NS,
+    SchedulerDesign,
+    critical_path_ns,
+    total_luts,
+    total_registers,
+    utilization,
+)
+
+__all__ = [
+    "ScheduleResult", "eft_assign", "heft_rt", "heft_rt_batched", "heft_rt_jit",
+    "heft_rt_numpy", "priority_order",
+    "DAG", "StaticSchedule", "heft_static", "upward_rank",
+    "CycleReport", "first_decision_worst_case", "hw_latency_ns",
+    "oddeven_sort_cycles", "per_decision_latency_ns", "simulate_mapping_event",
+    "worst_case_cycles",
+    "PAPER_CRITICAL_PATH_NS", "PAPER_DESIGN", "PAPER_PER_DECISION_NS",
+    "SchedulerDesign", "critical_path_ns", "total_luts", "total_registers",
+    "utilization",
+]

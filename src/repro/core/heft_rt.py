@@ -1,0 +1,164 @@
+"""HEFT_RT — the runtime variant of Heterogeneous Earliest Finish Time.
+
+This is the algorithm the paper implements in hardware (Section III-B / IV):
+at each *mapping event* the scheduler receives
+
+  - the ready queue: for each task, its average execution time across all PEs
+    (``Avg_TID``) and its per-PE execution time (``Exec_TID[PE_i]``),
+  - the estimated availability time of every PE (``T_avail``),
+
+sorts the ready queue by *descending* average execution time (the priority
+queue), and then assigns tasks one by one to the PE with the earliest finish
+time ``T_finish[PE_i] = T_avail[PE_i] + Exec_TID[PE_i]``, updating the selected
+PE's availability register after each assignment (the hardware feedback loop
+through the PE Handlers and the EFT Selector).
+
+Two functionally identical implementations exist in this repo:
+
+  * this module — pure ``jax.numpy`` + ``lax.scan`` (the "software" scheduler,
+    also the oracle for the Pallas kernels),
+  * :mod:`repro.kernels` — the TPU-native dataplane mirroring the paper's FPGA
+    overlay (odd–even transposition sort + EFT min-tree), validated to make
+    *bit-identical* mapping decisions (the paper's Fig. 3 claim).
+
+Conventions
+-----------
+* Invalid / padding queue slots are marked by ``valid=False``; they sort last
+  and receive assignment ``-1``.
+* Unsupported (task, PE) pairs carry ``exec = +inf`` and are never selected
+  unless every PE is unsupported (then the task is marked unschedulable, -1).
+* Ties in the EFT selection resolve to the lowest PE index — the semantics of
+  the paper's comparator min-tree.
+* The sort is *stable* (odd–even transposition with strict compare is stable),
+  so software and hardware orderings agree exactly even with duplicate keys.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+INF = jnp.inf
+
+
+class ScheduleResult(NamedTuple):
+    """Output of one mapping event.
+
+    All per-task arrays are in *priority order* (the order tasks were dequeued
+    from the priority queue), length D (queue depth).
+    """
+
+    order: jax.Array        # i32[D] — queue slot index (QID) in priority order
+    assignment: jax.Array   # i32[D] — selected PE per dequeued task, -1 if none
+    start_time: jax.Array   # f32[D] — T_avail of the selected PE at assignment
+    finish_time: jax.Array  # f32[D] — start + exec on the selected PE
+    new_avail: jax.Array    # f32[P] — updated PE availability registers
+
+
+def priority_order(avg: jax.Array, valid: jax.Array) -> jax.Array:
+    """Stable descending sort order by average execution time.
+
+    Mirrors the shift-register priority queue: highest ``Avg_TID`` first,
+    invalid slots last, stable among ties.
+    """
+    keys = jnp.where(valid, avg.astype(jnp.float32), -INF)
+    return jnp.argsort(-keys, stable=True).astype(jnp.int32)
+
+
+def eft_assign(
+    exec_sorted: jax.Array,   # f32[D, P] exec times in priority order
+    avail: jax.Array,         # f32[P]
+    valid_sorted: jax.Array,  # bool[D]
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Sequential EFT assignment — the PE-handler / EFT-selector feedback loop.
+
+    Returns (assignment i32[D], start f32[D], finish f32[D], new_avail f32[P]).
+    """
+    P = avail.shape[-1]
+    lanes = jnp.arange(P)
+
+    def step(avail, inp):
+        ex, v = inp
+        finish = avail + ex                       # PE handlers: adders
+        pe = jnp.argmin(finish).astype(jnp.int32)  # EFT selector: min-tree
+        f = finish[pe]
+        schedulable = v & jnp.isfinite(f)
+        start = avail[pe]
+        # Availability register write-back of the selected PE handler only.
+        new_avail = jnp.where((lanes == pe) & schedulable, f, avail)
+        pe_out = jnp.where(schedulable, pe, jnp.int32(-1))
+        return new_avail, (
+            pe_out,
+            jnp.where(schedulable, start, INF),
+            jnp.where(schedulable, f, INF),
+        )
+
+    new_avail, (pes, starts, fins) = lax.scan(
+        step, avail.astype(jnp.float32), (exec_sorted.astype(jnp.float32), valid_sorted)
+    )
+    return pes, starts, fins, new_avail
+
+
+def heft_rt(
+    avg: jax.Array,          # f32[D] — Avg_TID per queue slot
+    exec_times: jax.Array,   # f32[D, P] — Exec_TID[PE_i]
+    avail: jax.Array,        # f32[P] — T_avail
+    valid: jax.Array | None = None,  # bool[D]
+) -> ScheduleResult:
+    """One HEFT_RT mapping event (software reference implementation)."""
+    D = avg.shape[-1]
+    if valid is None:
+        valid = jnp.ones((D,), dtype=bool)
+    order = priority_order(avg, valid)
+    exec_sorted = jnp.take(exec_times, order, axis=0)
+    valid_sorted = jnp.take(valid, order, axis=0)
+    pes, starts, fins, new_avail = eft_assign(exec_sorted, avail, valid_sorted)
+    return ScheduleResult(order, pes, starts, fins, new_avail)
+
+
+heft_rt_jit = jax.jit(heft_rt)
+
+
+def heft_rt_batched(avg, exec_times, avail, valid=None):
+    """vmapped mapping events — used by sweep benchmarks and the serving
+    scheduler when scoring many independent queues at once."""
+    if valid is None:
+        valid = jnp.ones(avg.shape, dtype=bool)
+    return jax.vmap(heft_rt)(avg, exec_times, avail, valid)
+
+
+# ---------------------------------------------------------------------------
+# Plain-numpy twin used by the discrete-event runtime simulator (hot path is
+# thousands of tiny mapping events; numpy avoids dispatch overhead there, and
+# tests pin it against heft_rt / the Pallas kernels).
+# ---------------------------------------------------------------------------
+
+import numpy as np  # noqa: E402
+
+
+def heft_rt_numpy(avg, exec_times, avail):
+    """Returns (order, assignment, start, finish, new_avail) as numpy arrays.
+
+    ``avg``: (n,), ``exec_times``: (n, P), ``avail``: (P,). All slots valid.
+    """
+    avg = np.asarray(avg, dtype=np.float64)
+    exec_times = np.asarray(exec_times, dtype=np.float64)
+    avail = np.array(avail, dtype=np.float64)
+    n = avg.shape[0]
+    # numpy has no descending stable sort; negate with stable mergesort.
+    order = np.argsort(-avg, kind="stable")
+    assignment = np.full(n, -1, dtype=np.int64)
+    start = np.full(n, np.inf)
+    finish = np.full(n, np.inf)
+    for i, t in enumerate(order):
+        fin = avail + exec_times[t]
+        pe = int(np.argmin(fin))
+        if np.isfinite(fin[pe]):
+            assignment[i] = pe
+            start[i] = avail[pe]
+            finish[i] = fin[pe]
+            avail[pe] = fin[pe]
+    return order, assignment, start, finish, avail

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: PE Handlers + EFT Selector feedback loop.
+
+The paper's assignment datapath (Fig. 1): for each task dequeued from the
+priority queue, every PE Handler adds the task's execution time on its PE to
+its availability register (``T_finish = T_avail + Exec``), the EFT Selector's
+comparator min-tree picks the PE with the lowest finish time, and only the
+selected handler latches the new availability.  The dependency of task *t+1*'s
+decision on task *t*'s register update is the fundamental serial loop of HEFT —
+in hardware it bounds the drain rate at one decision/cycle; here it is a
+``fori_loop`` whose body is one P-wide VPU add + one min-tree reduction.
+
+TPU mapping: PEs live on vector lanes (padded to 128 with +inf so padding can
+never win the argmin); the per-task outputs are accumulated branchlessly into
+(1, D) vectors with iota masks — no scalar stores in the loop body.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+INF = float("inf")
+
+
+def _eft_kernel(exec_ref, avail_ref,
+                pe_out_ref, st_out_ref, fin_out_ref, avail_out_ref,
+                *, D: int, P_pad: int):
+    lanes = lax.broadcasted_iota(jnp.int32, (1, P_pad), 1)
+    dcol = lax.broadcasted_iota(jnp.int32, (1, D), 1)
+
+    def body(t, carry):
+        avail, pes, sts, fins = carry
+        ex = exec_ref[pl.ds(t, 1), :]               # (1, P_pad) LUT-RAM read
+        finish = avail + ex                          # PE handlers (adders)
+        fmin = jnp.min(finish)                       # EFT selector min-tree
+        pe = jnp.argmin(finish).astype(jnp.int32)    #   … and its index
+        ok = fmin < INF
+        sel = lanes == pe
+        start = jnp.min(jnp.where(sel, avail, INF))  # avail[pe] before update
+        # availability-register write-back of the selected PE handler
+        avail = jnp.where(sel & ok, fmin, avail)
+        here = dcol == t
+        pes = jnp.where(here, jnp.where(ok, pe, -1), pes)
+        sts = jnp.where(here, jnp.where(ok, start, INF), sts)
+        fins = jnp.where(here, jnp.where(ok, fmin, INF), fins)
+        return avail, pes, sts, fins
+
+    init = (
+        avail_ref[...],
+        jnp.full((1, D), -1, dtype=jnp.int32),
+        jnp.full((1, D), INF, dtype=jnp.float32),
+        jnp.full((1, D), INF, dtype=jnp.float32),
+    )
+    avail, pes, sts, fins = lax.fori_loop(0, D, body, init)
+    pe_out_ref[...] = pes
+    st_out_ref[...] = sts
+    fin_out_ref[...] = fins
+    avail_out_ref[...] = avail
+
+
+def eft_select_padded(exec_pad, avail_pad, *, interpret: bool):
+    """exec_pad: f32[D, P_pad]; avail_pad: f32[1, P_pad]. P_pad multiple of 128."""
+    D, P_pad = exec_pad.shape
+    kernel = functools.partial(_eft_kernel, D=D, P_pad=P_pad)
+    out_shape = [
+        jax.ShapeDtypeStruct((1, D), jnp.int32),
+        jax.ShapeDtypeStruct((1, D), jnp.float32),
+        jax.ShapeDtypeStruct((1, D), jnp.float32),
+        jax.ShapeDtypeStruct((1, P_pad), jnp.float32),
+    ]
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        in_specs=[
+            pl.BlockSpec((D, P_pad), lambda: (0, 0)),
+            pl.BlockSpec((1, P_pad), lambda: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, D), lambda: (0, 0)),
+            pl.BlockSpec((1, D), lambda: (0, 0)),
+            pl.BlockSpec((1, D), lambda: (0, 0)),
+            pl.BlockSpec((1, P_pad), lambda: (0, 0)),
+        ],
+        interpret=interpret,
+    )(exec_pad, avail_pad)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: the shift-register priority queue's sorting network.
+
+The paper's priority queue (Fig. 2) sorts by odd–even transposition: each cell
+compare-exchanges with its immediate neighbour, alternating even/odd phases.
+On the FPGA this is a systolic network whose path delay is independent of the
+queue depth D.
+
+TPU mapping (hardware adaptation, see DESIGN.md §2): the queue lives in VMEM as
+two *brick-wall planes* — even-indexed cells ``ke`` and odd-indexed cells
+``ko``, each a (1, D/2) vector.
+
+  * even phase  — compare pairs (2i, 2i+1)  = ``(ke[i], ko[i])``  → one
+    full-width elementwise VPU select, no data movement;
+  * odd phase   — compare pairs (2i+1, 2i+2) = ``(ko[i], ke[i+1])`` → one
+    lane-shift by 1 (the "wire to the neighbour cell") plus the same select.
+
+A fixed ``D`` compare phases (``D/2 + 1`` even+odd iterations) guarantee a
+fully sorted queue — odd–even transposition sorts n elements in n phases worst
+case.  The FPGA's early termination (2 swap-free cycles) is a *latency* trick
+with no TPU analogue (data-dependent trip counts defeat vectorization); it is
+modeled in :mod:`repro.core.queue_model` instead.
+
+Strict compares (swap only when strictly out of order) make the sort *stable*,
+which is what makes hardware and software mapping decisions bit-identical
+(paper Fig. 3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _sort_kernel(ke_ref, ko_ref, pe_ref, po_ref,
+                 oke_ref, oko_ref, ope_ref, opo_ref,
+                 *, M: int, n_iters: int, sentinel):
+    """One pallas program: sort 2M elements held as even/odd planes."""
+    col = lax.broadcasted_iota(jnp.int32, (1, M), 1)
+    is_last = col == (M - 1)
+    is_first = col == 0
+
+    def phase_pair(_, carry):
+        ke, ko, pe_, po = carry
+        # --- even phase: (ke[i], ko[i]) ---------------------------------
+        m = ke < ko                      # descending: bigger key moves left
+        ke, ko = jnp.where(m, ko, ke), jnp.where(m, ke, ko)
+        pe_, po = jnp.where(m, po, pe_), jnp.where(m, pe_, po)
+        # --- odd phase: (ko[i], ke[i+1]) --------------------------------
+        b = jnp.where(is_last, sentinel, jnp.roll(ke, -1, axis=1))
+        pb = jnp.roll(pe_, -1, axis=1)
+        m = ko < b
+        ko_new = jnp.where(m, b, ko)
+        b_new = jnp.where(m, ko, b)
+        po_new = jnp.where(m, pb, po)
+        pb_new = jnp.where(m, po, pb)
+        ke_new = jnp.where(is_first, ke, jnp.roll(b_new, 1, axis=1))
+        pe_new = jnp.where(is_first, pe_, jnp.roll(pb_new, 1, axis=1))
+        return ke_new, ko_new, pe_new, po_new
+
+    init = (ke_ref[...], ko_ref[...], pe_ref[...], po_ref[...])
+    ke, ko, pe_, po = lax.fori_loop(0, n_iters, phase_pair, init)
+    oke_ref[...] = ke
+    oko_ref[...] = ko
+    ope_ref[...] = pe_
+    opo_ref[...] = po
+
+
+def oddeven_sort_planes(ke, ko, pe_, po, *, interpret: bool):
+    """Sort even/odd planes (each (1, M)). Key dtype must be f32 or i32."""
+    M = ke.shape[-1]
+    sentinel = (jnp.finfo(ke.dtype).min if jnp.issubdtype(ke.dtype, jnp.floating)
+                else jnp.iinfo(ke.dtype).min)
+    kernel = functools.partial(_sort_kernel, M=M, n_iters=M + 1,
+                               sentinel=ke.dtype.type(sentinel))
+    out_shape = [
+        jax.ShapeDtypeStruct((1, M), ke.dtype),
+        jax.ShapeDtypeStruct((1, M), ko.dtype),
+        jax.ShapeDtypeStruct((1, M), pe_.dtype),
+        jax.ShapeDtypeStruct((1, M), po.dtype),
+    ]
+    specs = [pl.BlockSpec((1, M), lambda: (0, 0))] * 4
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        in_specs=specs,
+        out_specs=specs,
+        interpret=interpret,
+    )(ke, ko, pe_, po)

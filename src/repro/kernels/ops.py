@@ -1,0 +1,138 @@
+"""Public jit'd wrappers for the HEFT_RT hardware-dataplane kernels.
+
+Handles padding to TPU-friendly shapes (queue depth → multiple of 256 so the
+even/odd planes are 128-lane aligned; PE axis → 128 lanes), dtype promotion,
+and interpret-mode selection (interpret=True on CPU, compiled on TPU).
+
+Public API
+----------
+``oddeven_sort(keys, payload)``      — stable descending sort (priority queue)
+``eft_select(exec_sorted, avail)``   — EFT assignment over a sorted queue
+``heft_rt_hw(avg, exec, avail)``     — full fused mapping event (the overlay)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import eft_select as _eft
+from repro.kernels import heft_fused as _fused
+from repro.kernels import oddeven_sort as _sort
+
+_LANES = 128
+_QUEUE_ALIGN = 256  # two 128-lane planes
+
+INF = float("inf")
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _key_compute_dtype(dtype) -> jnp.dtype:
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.dtype(jnp.float32)   # bf16/f16 ⊂ f32 exactly
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.dtype(jnp.int32)
+    raise TypeError(f"unsupported key dtype {dtype}")
+
+
+def _split_planes(x):
+    """(D,) → even/odd planes (1, D//2)."""
+    return x[0::2][None, :], x[1::2][None, :]
+
+
+def _interleave(a, b):
+    """even/odd planes (1, M) → (2M,)."""
+    return jnp.stack([a[0], b[0]], axis=1).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _oddeven_sort_impl(keys, payload, interpret: bool):
+    orig_dtype = keys.dtype
+    cdt = _key_compute_dtype(orig_dtype)
+    D0 = keys.shape[-1]
+    D = max(_round_up(D0, _QUEUE_ALIGN), _QUEUE_ALIGN)
+    sentinel = (jnp.finfo(cdt).min if jnp.issubdtype(cdt, jnp.floating)
+                else jnp.iinfo(cdt).min)
+    k = jnp.full((D,), sentinel, dtype=cdt).at[:D0].set(keys.astype(cdt))
+    p = jnp.full((D,), -1, dtype=jnp.int32).at[:D0].set(payload.astype(jnp.int32))
+    ke, ko = _split_planes(k)
+    pe_, po = _split_planes(p)
+    oke, oko, ope, opo = _sort.oddeven_sort_planes(ke, ko, pe_, po, interpret=interpret)
+    keys_out = _interleave(oke, oko)[:D0]
+    payload_out = _interleave(ope, opo)[:D0]
+    return keys_out.astype(orig_dtype), payload_out
+
+
+def oddeven_sort(keys: jax.Array, payload: jax.Array, *, interpret: bool | None = None):
+    """Stable descending sort of (keys, payload) via the priority-queue kernel."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _oddeven_sort_impl(keys, payload, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _eft_select_impl(exec_sorted, avail, interpret: bool):
+    D0, P0 = exec_sorted.shape
+    P_pad = max(_round_up(P0, _LANES), _LANES)
+    D = max(D0, 8)  # keep a sane minimum block
+    ex = jnp.full((D, P_pad), INF, dtype=jnp.float32)
+    ex = ex.at[:D0, :P0].set(exec_sorted.astype(jnp.float32))
+    av = jnp.full((1, P_pad), INF, dtype=jnp.float32)
+    av = av.at[0, :P0].set(avail.astype(jnp.float32))
+    pes, sts, fins, new_avail = _eft.eft_select_padded(ex, av, interpret=interpret)
+    return (pes[0, :D0], sts[0, :D0], fins[0, :D0], new_avail[0, :P0])
+
+
+def eft_select(exec_sorted: jax.Array, avail: jax.Array, *, interpret: bool | None = None):
+    """EFT assignment over an already-sorted ready queue.
+
+    Returns (assignment i32[D], start f32[D], finish f32[D], new_avail f32[P]).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    return _eft_select_impl(exec_sorted, avail, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _heft_rt_hw_impl(avg, exec_times, avail, interpret: bool):
+    D0, P0 = exec_times.shape
+    D = max(_round_up(D0, _QUEUE_ALIGN), _QUEUE_ALIGN)
+    P_pad = max(_round_up(P0, _LANES), _LANES)
+    k = jnp.full((D,), float("-inf"), dtype=jnp.float32)
+    k = k.at[:D0].set(avg.astype(jnp.float32))
+    q = jnp.arange(D, dtype=jnp.int32)  # QIDs; padded slots keep their index
+    ex = jnp.full((D, P_pad), INF, dtype=jnp.float32)
+    ex = ex.at[:D0, :P0].set(exec_times.astype(jnp.float32))
+    av = jnp.full((1, P_pad), INF, dtype=jnp.float32)
+    av = av.at[0, :P0].set(avail.astype(jnp.float32))
+    ke, ko = _split_planes(k)
+    qe, qo = _split_planes(q)
+    order, pes, sts, fins, new_avail = _fused.heft_fused_padded(
+        ke, ko, qe, qo, ex, av, interpret=interpret)
+    return (order[0, :D0], pes[0, :D0], sts[0, :D0], fins[0, :D0],
+            new_avail[0, :P0])
+
+
+def heft_rt_hw(avg: jax.Array, exec_times: jax.Array, avail: jax.Array,
+               *, interpret: bool | None = None):
+    """One full HEFT_RT mapping event through the fused overlay kernel.
+
+    Mirrors :func:`repro.core.heft_rt` exactly: returns (order, assignment,
+    start, finish, new_avail), with padded slots (beyond the real queue) never
+    influencing the availability registers.
+
+    Note: padded queue slots sort *behind* all real tasks (key −inf, stable),
+    so ``order[:n]`` over real slots matches the software scheduler's order.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    return _heft_rt_hw_impl(avg, exec_times, avail, interpret)

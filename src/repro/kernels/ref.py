@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for the HEFT_RT hardware-dataplane kernels.
+
+Every Pallas kernel in this package is validated (interpret mode on CPU,
+compiled on TPU) against these references; the references themselves are
+pinned against :mod:`repro.core.heft_rt` so kernel ⇔ software-scheduler
+equivalence (the paper's Fig. 3 functional verification) is transitive.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = float("-inf")
+
+
+def oddeven_sort_ref(keys: jax.Array, payload: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Stable descending sort of (keys, payload) — what the shift-register
+    priority queue computes.  Odd–even transposition with strict compares is
+    stable, so a stable descending argsort is the exact oracle."""
+    order = jnp.argsort(-keys.astype(jnp.float32), stable=True)
+    return keys[order], payload[order]
+
+
+def oddeven_sort_sim(keys: jax.Array, payload: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Step-by-step odd–even transposition (descending, strict swap), written
+    with the same brick-wall even/odd-plane decomposition the Pallas kernel
+    uses — an *executable spec* of the kernel's inner loop."""
+    D = keys.shape[0]
+    assert D % 2 == 0
+    M = D // 2
+    ke, ko = keys[0::2].astype(jnp.float32), keys[1::2].astype(jnp.float32)
+    pe_, po = payload[0::2], payload[1::2]
+
+    def phase_pair(carry, _):
+        ke, ko, pe_, po = carry
+        # even phase: compare (2i, 2i+1) == (ke[i], ko[i])
+        m = ke < ko
+        ke, ko = jnp.where(m, ko, ke), jnp.where(m, ke, ko)
+        pe_, po = jnp.where(m, po, pe_), jnp.where(m, pe_, po)
+        # odd phase: compare (2i+1, 2i+2) == (ko[i], ke[i+1])
+        b = jnp.roll(ke, -1).at[M - 1].set(NEG_INF)      # right neighbours
+        pb = jnp.roll(pe_, -1)
+        m = ko < b
+        ko_new = jnp.where(m, b, ko)
+        b_new = jnp.where(m, ko, b)
+        pb_new = jnp.where(m, po, pb)
+        po_new = jnp.where(m, pb, po)
+        ke = jnp.roll(b_new, 1).at[0].set(ke[0])
+        pe_ = jnp.roll(pb_new, 1).at[0].set(pe_[0])
+        return (ke, ko_new, pe_, po_new), None
+
+    (ke, ko, pe_, po), _ = lax.scan(phase_pair, (ke, ko, pe_, po), None, length=M + 1)
+    keys_out = jnp.stack([ke, ko], axis=1).reshape(D)
+    payload_out = jnp.stack([pe_, po], axis=1).reshape(D)
+    return keys_out.astype(keys.dtype), payload_out
+
+
+def eft_select_ref(
+    exec_sorted: jax.Array,  # f32[D, P] — exec times in priority order
+    avail: jax.Array,        # f32[P]
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """PE-handler + EFT-selector feedback loop.
+
+    Returns (assignment i32[D], start f32[D], finish f32[D], new_avail f32[P]).
+    Rows whose every exec is +inf (padding / unsupported) get assignment -1
+    and start/finish = +inf, and do not touch the availability registers.
+    """
+    P = avail.shape[-1]
+    lanes = jnp.arange(P)
+
+    def step(avail, ex):
+        finish = avail + ex
+        pe = jnp.argmin(finish).astype(jnp.int32)
+        f = finish[pe]
+        ok = jnp.isfinite(f)
+        start = avail[pe]
+        new_avail = jnp.where((lanes == pe) & ok, f, avail)
+        return new_avail, (
+            jnp.where(ok, pe, jnp.int32(-1)),
+            jnp.where(ok, start, jnp.inf),
+            jnp.where(ok, f, jnp.inf),
+        )
+
+    new_avail, (pes, starts, fins) = lax.scan(
+        step, avail.astype(jnp.float32), exec_sorted.astype(jnp.float32)
+    )
+    return pes, starts, fins, new_avail
+
+
+def heft_fused_ref(
+    avg: jax.Array,         # f32[D]
+    exec_times: jax.Array,  # f32[D, P] in QUEUE order (indexed by QID)
+    avail: jax.Array,       # f32[P]
+):
+    """Full mapping event: sort by descending avg (stable), then EFT-assign.
+
+    Returns (order i32[D], assignment i32[D], start f32[D], finish f32[D],
+    new_avail f32[P]) — the oracle for the fused Pallas kernel and the exact
+    mirror of ``repro.core.heft_rt``.
+    """
+    D = avg.shape[0]
+    qids = jnp.arange(D, dtype=jnp.int32)
+    _, order = oddeven_sort_ref(avg, qids)
+    exec_sorted = jnp.take(exec_times, order, axis=0)
+    pes, starts, fins, new_avail = eft_select_ref(exec_sorted, avail)
+    return order, pes, starts, fins, new_avail

@@ -1,0 +1,296 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices form the production meshes, every
+cell's step function must lower AND compile, and the compiled artifact yields
+the memory analysis (fits?) + cost analysis (FLOPs/bytes) + collective
+schedule that feed EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell, cached
+"""
+
+# The VERY FIRST lines, before ANY other import: jax locks the device count
+# on first backend initialization.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # XLA hoists dtype converts of loop-invariant stacked buffers (saved
+    # residuals, int8 optimizer moments) out of while loops, materializing
+    # full f32 copies; disable those passes for honest memory analysis.
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion,convert-mover "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import all_arch_names, get_config          # noqa: E402
+from repro.dist.hints import sharding_policy                  # noqa: E402
+from repro.dist.sharding import (                             # noqa: E402
+    activation_hint_policy,
+    batch_pspec,
+    cache_pspecs,
+    named,
+    opt_pspecs,
+    param_pspecs,
+)
+from repro.launch.hlo_analysis import analyze_hlo                # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_axes  # noqa: E402
+from repro.launch.specs import (                               # noqa: E402
+    build_step,
+    input_specs,
+    opt_config_for,
+    runnable_shapes,
+)
+from repro.models.config import SHAPES                         # noqa: E402
+from repro.models.model import param_specs as model_param_specs  # noqa: E402
+from repro.optim.adamw import init_opt_state                   # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "..", "..", "..", "experiments", "artifacts", "dryrun")
+
+# ---------------------------------------------------------------------------
+# collective-bytes extraction from the partitioned HLO
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\w+\[[\d,]*\]))\S*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+# wire-byte convention per op, as a multiple of the per-device RESULT bytes
+# (ring algorithms; n = group size is folded into the convention):
+#   all-gather        result is the gathered buffer      → ×1
+#   all-reduce        reduce-scatter + all-gather        → ×2
+#   reduce-scatter    sends ≈ full input ≈ result × n    → ×1 of input ≈ ×1·n
+#   all-to-all        permutes the full buffer           → ×1
+#   collective-permute one hop                           → ×1
+_WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    per_op: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        tuple_part, single, op = m.group(1), m.group(2), m.group(3)
+        text = tuple_part if tuple_part else single
+        size = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(text))
+        per_op[op] = per_op.get(op, 0.0) + size * _WIRE_FACTOR[op]
+        count[op] = count.get(op, 0) + 1
+    return {"bytes_by_op": per_op,
+            "count_by_op": count,
+            "total_wire_bytes_per_device": sum(per_op.values())}
+
+
+# ---------------------------------------------------------------------------
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
+                *, policy_override=None, fsdp: bool = True,
+                fsdp_experts_only: bool = False,
+                opt_2d: bool = False, cache_seq_shard: bool = False,
+                verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ax = mesh_axes(multi_pod=multi_pod)
+    t0 = time.time()
+
+    p_specs = model_param_specs(cfg)
+    p_sh = named(mesh, param_pspecs(cfg, ax, fsdp=fsdp,
+                                    fsdp_experts_only=fsdp_experts_only))
+    ins = input_specs(cfg, shape)
+    policy = dict(policy_override if policy_override is not None else
+                  activation_hint_policy(cfg, ax, shape))
+    policy["__mesh__"] = mesh
+
+    step = build_step(cfg, shape)
+
+    if shape.kind == "train":
+        opt_cfg = opt_config_for(cfg)
+        o_specs = jax.eval_shape(lambda: init_opt_state(p_specs, opt_cfg))
+        opt_param_specs = param_pspecs(cfg, ax, fsdp=fsdp,
+                                       fsdp_experts_only=fsdp_experts_only)
+        if opt_2d:
+            # moments may shard on MORE axes than params (one reshard per
+            # step vs per-layer weight gathers): fill the first free dim
+            # with 'data' when the param spec doesn't use it.
+            from jax.sharding import PartitionSpec as P
+
+            def densify(spec, shape_leaf):
+                shape = shape_leaf.shape
+                entries = list(spec) + [None] * (len(shape) - len(tuple(spec)))
+                used = set()
+                for e in entries:
+                    for a in (e if isinstance(e, tuple) else (e,)):
+                        if a:
+                            used.add(a)
+                if ax.data in used:
+                    return spec
+                for i, e in enumerate(entries):
+                    if e is None and shape[i] % 16 == 0:
+                        entries[i] = ax.data
+                        return P(*entries)
+                return spec
+
+            opt_param_specs = jax.tree.map(
+                densify, opt_param_specs, p_specs,
+                is_leaf=lambda x: isinstance(x, P))
+        o_sh = named(mesh, opt_pspecs(opt_param_specs,
+                                      opt_cfg.moment_dtype, ax,
+                                      param_shapes=p_specs))
+        b_sh = named(mesh, batch_pspec(ax, shape))
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, o_sh, b_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+        args = (p_specs, o_specs, ins["tokens"], ins["labels"])
+    elif shape.kind == "prefill":
+        c_sh = named(mesh, cache_pspecs(cfg, ax, shape))
+        b_sh = named(mesh, batch_pspec(ax, shape))
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                         out_shardings=(None, c_sh))
+        args = (p_specs, ins["tokens"])
+    else:  # decode
+        c_sh = named(mesh, cache_pspecs(cfg, ax, shape,
+                                        seq_shard=cache_seq_shard))
+        b_sh = named(mesh, batch_pspec(ax, shape))
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, c_sh, b_sh, None),
+                         out_shardings=(None, c_sh),
+                         donate_argnums=(1,))
+        args = (p_specs, ins["caches"], ins["tokens"], ins["pos"])
+
+    with jax.set_mesh(mesh), sharding_policy(policy):
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        mem_info[k] = getattr(mem, k, None)
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)           # unweighted op inventory
+    weighted = analyze_hlo(hlo)            # trip-count-weighted (roofline)
+
+    out = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "num_devices": mesh.devices.size,
+        "fsdp": fsdp,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "flops_per_device": flops,                       # XLA (body-once)
+        "bytes_accessed_per_device": bytes_accessed,     # XLA (body-once)
+        "weighted": weighted,                            # trip-weighted
+        "collectives": coll,
+        "memory": mem_info,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "hlo_chars": len(hlo),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {out['mesh']}: "
+              f"compile OK ({t_compile:.1f}s) "
+              f"wflops/dev={weighted['dot_flops_per_device']:.3e} "
+              f"argbytes/dev={mem_info.get('argument_size_in_bytes')} "
+              f"temp/dev={mem_info.get('temp_size_in_bytes')} "
+              f"wwire/dev={weighted['total_wire_bytes_per_device']:.3e}")
+        print(compiled.memory_analysis())
+    return out
+
+
+def cell_path(arch: str, shape_name: str, multi_pod: bool, tag: str = "") -> str:
+    mesh = "multi" if multi_pod else "single"
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    return os.path.join(ARTIFACT_DIR, f"{arch}_{shape_name}_{mesh}{suffix}.json")
+
+
+def run_all(archs=None, shapes=None, meshes=("single", "multi"),
+            force: bool = False) -> list[dict]:
+    results = []
+    for arch in (archs or all_arch_names()):
+        cfg = get_config(arch)
+        for shape_name in (shapes or runnable_shapes(cfg)):
+            if shape_name not in runnable_shapes(cfg):
+                continue
+            for mesh_kind in meshes:
+                multi = mesh_kind == "multi"
+                path = cell_path(arch, shape_name, multi)
+                if os.path.exists(path) and not force:
+                    with open(path) as f:
+                        results.append(json.load(f))
+                    continue
+                try:
+                    res = dryrun_cell(arch, shape_name, multi)
+                except Exception as e:  # a failing cell is a bug — record it
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"[dryrun] FAILED {arch} × {shape_name} × {mesh_kind}: {e}")
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                results.append(res)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        meshes = ("single", "multi") if args.mesh == "both" else \
+            (args.mesh,) if args.mesh != "both" else ("single", "multi")
+        run_all(archs=[args.arch] if args.arch else None,
+                shapes=[args.shape] if args.shape else None,
+                meshes=("single", "multi"), force=args.force)
+        return
+
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for mk in meshes:
+        res = dryrun_cell(args.arch, args.shape, mk == "multi",
+                          fsdp=not args.no_fsdp)
+        with open(cell_path(args.arch, args.shape, mk == "multi"), "w") as f:
+            json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

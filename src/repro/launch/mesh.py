@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (device count is locked at first backend init — the dry-run
+sets XLA_FLAGS before any import for exactly this reason).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.dist.sharding import MeshAxes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(*, multi_pod: bool = False) -> MeshAxes:
+    return MeshAxes(pod="pod" if multi_pod else None)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for unit tests (requires enough local devices)."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,58 @@
+"""Serving launcher — batched-request demo with the HEFT_RT front end.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --requests 12
+
+Builds a small heterogeneous "fleet" of replicas of a smoke-config model
+(speed factors emulate mixed pods), maps dynamically arriving requests with
+HEFT_RT, and reports per-replica distribution + wall time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.model import init_params
+from repro.serve import HeftFrontEnd, ReplicaHandle, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--replicas", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(jax.random.key(0), cfg)
+    print(f"[serve] arch={cfg.name} params={cfg.param_count()/1e6:.2f}M "
+          f"replicas={args.replicas}")
+
+    speeds = [1.0, 0.7, 1.4][: args.replicas] or [1.0]
+    fleet = [ReplicaHandle(f"replica{i}(x{s})",
+                           ServeEngine(cfg, params, max_len=128), speed=s)
+             for i, s in enumerate(speeds)]
+    front = HeftFrontEnd(fleet)
+
+    rng = np.random.default_rng(0)
+    requests = [
+        (rng.integers(0, cfg.vocab_size, rng.integers(8, 48)).astype(np.int32),
+         args.new_tokens)
+        for _ in range(args.requests)
+    ]
+    t0 = time.time()
+    outs, counts = front.run_batch(requests)
+    dt = time.time() - t0
+    print(f"[serve] {len(outs)} requests in {dt:.2f}s "
+          f"({sum(len(p)+args.new_tokens for p,_ in requests)/dt:.0f} tok/s)")
+    print(f"[serve] request distribution (HEFT_RT): {counts}")
+    print(f"[serve] sample output ids: {outs[0][0, -8:].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Input specs + step builders for every (arch × shape) dry-run cell.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins for every
+model input (no device allocation).  ``build_step`` returns the function that
+each shape kind lowers:
+
+  train_4k    → full train_step: loss + grad (remat) + AdamW update
+  prefill_32k → prefill_step: forward + KV/state-cache fill + last logits
+  decode_*    → serve_step: ONE new token against a seq_len cache
+
+Modality note ([audio]/[vlm]): the frontend is a stub — specs feed token ids
+(EnCodec/VQ codes); precomputed frame/patch embeddings would enter through
+the same embedding-table path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.model import cache_specs, decode_step, loss_fn, prefill_step
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+
+def opt_config_for(cfg: ModelConfig) -> AdamWConfig:
+    """Moment precision policy: int8 blockwise for ≥100B models (fits HBM at
+    256 chips — see optim/adamw.py), f32 otherwise."""
+    big = cfg.param_count() >= 100e9
+    return AdamWConfig(learning_rate=1e-4, weight_decay=0.1,
+                       moment_dtype="int8" if big else "float32")
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    # decode: one new token with a KV/state cache of seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+        "caches": cache_specs(cfg, B, S),
+    }
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: AdamWConfig | None = None):
+    """Returns (step_fn, arg_order) where step_fn takes the input_specs fields
+    (plus params/opt_state for train, params for serving) positionally."""
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or opt_config_for(cfg)
+
+        def train_step(params, opt_state, tokens, labels):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, tokens, labels, cfg)
+            params, opt_state, om = adamw_update(grads, opt_state, params,
+                                                 opt_cfg)
+            return params, opt_state, {"loss": loss, **om}
+
+        return train_step
+
+    if shape.kind == "prefill":
+        def prefill(params, tokens):
+            # static-trip attention loops → analyzable HLO while bounds
+            return prefill_step(params, tokens, cfg, differentiable=True)
+        return prefill
+
+    def serve_step(params, caches, tokens, pos):
+        return decode_step(params, caches, tokens, pos, cfg)
+    return serve_step
+
+
+def runnable_shapes(cfg: ModelConfig) -> list[str]:
+    """long_500k needs sub-quadratic attention: SSM/hybrid only (the 8
+    full-attention skips are documented in DESIGN.md §5)."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    kinds = {cfg.layer_kind(i) for i in range(cfg.num_layers)}
+    if kinds == {"mamba"} or "mamba" in kinds:
+        out.append("long_500k")
+    return out

@@ -1,0 +1,25 @@
+# LM substrate: flexible decoder-only stacks (GQA/MLA attention, local/global
+# windows, softcaps, MoE with shared experts + dense residual, Mamba-1 SSM,
+# hybrid interleaves) behind one ModelConfig, built for scan-over-layers
+# compilation and pjit sharding.
+from repro.models.config import SHAPES, ModelConfig, MoEConfig, ShapeConfig, SSMConfig
+from repro.models.model import (
+    cache_specs,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    logits_fn,
+    loss_fn,
+    model_flops,
+    param_shapes,
+    param_specs,
+    prefill_step,
+)
+
+__all__ = [
+    "SHAPES", "ModelConfig", "MoEConfig", "ShapeConfig", "SSMConfig",
+    "cache_specs", "decode_step", "forward", "init_cache", "init_params",
+    "logits_fn", "loss_fn", "model_flops", "param_shapes", "param_specs",
+    "prefill_step",
+]

@@ -1,0 +1,35 @@
+"""Dense feed-forward blocks: SwiGLU (llama family) and GELU MLP (musicgen)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, dtype_of
+
+
+def init_ffn_params(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    dt = dtype_of(cfg.param_dtype)
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.ffn_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], (D, F), dt),
+            "w_up": dense_init(ks[1], (D, F), dt),
+            "w_down": dense_init(ks[2], (F, D), dt),
+        }
+    return {
+        "w_up": dense_init(ks[0], (D, F), dt),
+        "w_down": dense_init(ks[1], (F, D), dt),
+    }
+
+
+def ffn_block(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if "w_gate" in params:
+        act = jax.nn.gelu if cfg.ffn_type == "geglu" else jax.nn.silu
+        h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]

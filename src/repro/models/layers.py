@@ -1,0 +1,74 @@
+"""Shared primitive layers: norms, RoPE, embeddings, softcaps, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init helpers — all params created through these so dtype policy is uniform.
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else (1.0 / jnp.sqrt(fan_in))
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm: variance in f32, elementwise scaling in the input dtype.
+
+    Deliberately avoids materializing an f32 copy of x: a full-width
+    ``x.astype(f32)`` as the first op of a rematted layer invites XLA to
+    hoist the convert out of the layer scan and save a second, twice-as-big
+    f32 residual stack (observed on the 512-device dry-runs).  The f32
+    convert here feeds a reduction only, so it fuses away.
+    """
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    rrms = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * rrms * (1.0 + weight).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    """Gemma-2 style logit soft-capping: cap·tanh(x/cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies in f32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate pairs (split-half convention).  x: (..., S, H, D); positions:
+    broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv_freq = rope_frequencies(d, theta)                       # (d/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # (...,S,d/2)
+    sin = jnp.sin(angles)[..., :, None, :]                      # (...,S,1,d/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

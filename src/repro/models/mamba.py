@@ -1,0 +1,199 @@
+"""Mamba-1 (selective SSM) block — Falcon-Mamba / Jamba mamba layers.
+
+TPU adaptation of the CUDA selective-scan kernel (DESIGN.md §2 applies to the
+substrate too): the GPU implementation fuses the whole recurrence in shared
+memory per block; on TPU we use a *two-level chunked scan*:
+
+  * outer ``lax.scan`` over sequence chunks carries the (B, d_inner, N)
+    boundary state — O(S/Q) sequential steps;
+  * within a chunk, ``lax.associative_scan`` over the Q positions evaluates
+    the recurrence in log2(Q) vector passes, materializing only
+    (B, Q, d_inner, N) — bounded VMEM/HBM pressure regardless of S.
+
+This keeps HLO small (one scan), keeps the backward pass memory at one
+chunk's residuals per layer, and is numerically stable (no exp of positive
+cumulative sums).  Decode is the O(1) single-step recurrence with a rolling
+conv state.
+
+Falcon-Mamba detail: RMS-normalizes B, C and Δ before use (``bcdt_rms``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.hints import shard_hint
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, dtype_of
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    r = cfg.ssm.dt_rank
+    return r if r > 0 else -(-cfg.d_model // 16)
+
+
+def init_mamba_params(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg.param_dtype)
+    s = cfg.ssm
+    D, dI, N = cfg.d_model, s.d_inner, s.d_state
+    R = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (dI, N))
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * dI), dt),
+        "conv_w": dense_init(ks[1], (s.d_conv, dI), dt, scale=0.5),
+        "conv_b": jnp.zeros((dI,), jnp.float32),
+        "x_proj": dense_init(ks[2], (dI, R + 2 * N), dt),
+        "dt_proj": dense_init(ks[3], (R, dI), dt),
+        "dt_bias": jnp.full((dI,), -4.6, jnp.float32),  # softplus ≈ 0.01
+        "A_log": jnp.log(A),                             # (dI, N) f32
+        "D": jnp.ones((dI,), jnp.float32),
+        "out_proj": dense_init(ks[4], (dI, D), dt),
+    }
+
+
+def _rms(x, eps):
+    return x * lax.rsqrt(jnp.mean(jnp.square(x), -1, keepdims=True) + eps)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv, kernel K, via K shifted adds.
+
+    x: (B, S, dI); w: (K, dI); state: (B, K-1, dI) trailing inputs of the
+    previous segment (decode/streaming).  Returns (y, new_state).
+    """
+    B, S, dI = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, dI), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, S+K-1, dI)
+    y = jnp.zeros((B, S, dI), jnp.float32)
+    for i in range(K):
+        y = y + xp[:, i:i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = y + b
+    new_state = xp[:, -(K - 1):]
+    return y.astype(x.dtype), new_state
+
+
+def _ssm_inputs(params, u, cfg):
+    """u: (B, L, dI) → Δ (B,L,dI), B_t (B,L,N), C_t (B,L,N) in f32."""
+    s = cfg.ssm
+    N = s.d_state
+    R = _dt_rank(cfg)
+    proj = u @ params["x_proj"]                        # (B, L, R+2N)
+    dt_r, B_t, C_t = jnp.split(proj.astype(jnp.float32), [R, R + N], axis=-1)
+    if getattr(s, "bcdt_rms", False):
+        eps = cfg.norm_eps
+        dt_r, B_t, C_t = _rms(dt_r, eps), _rms(B_t, eps), _rms(C_t, eps)
+    delta = jax.nn.softplus(dt_r @ params["dt_proj"].astype(jnp.float32)
+                            + params["dt_bias"])      # (B, L, dI)
+    return delta, B_t, C_t
+
+
+def _chunk_recurrence(h0, decay, bx):
+    """Within-chunk associative scan.
+
+    h0: (B, dI, N); decay/bx: (B, Q, dI, N).  Returns h_t for every t
+    (B, Q, dI, N).
+    """
+    def combine(a, b):
+        a_a, a_b = a
+        b_a, b_b = b
+        return a_a * b_a, b_a * a_b + b_b
+
+    a_sc, b_sc = lax.associative_scan(combine, (decay, bx), axis=1)
+    return a_sc * h0[:, None] + b_sc
+
+
+def selective_scan(params, u, cfg, h0=None):
+    """u: (B, S, dI) post-conv activations → (y (B,S,dI), h_final)."""
+    s = cfg.ssm
+    B, S, dI = u.shape
+    N = s.d_state
+    Q = min(s.chunk, S)
+    assert S % Q == 0, (S, Q)
+    A = -jnp.exp(params["A_log"])                      # (dI, N) f32
+    if h0 is None:
+        h0 = jnp.zeros((B, dI, N), jnp.float32)
+
+    delta, B_t, C_t = _ssm_inputs(params, u, cfg)
+    uf = u.astype(jnp.float32)
+
+    nc = S // Q
+    # (nc, B, Q, ...) chunked views, scanned over nc
+    def chunked(x):
+        return jnp.moveaxis(x.reshape(B, nc, Q, *x.shape[2:]), 1, 0)
+
+    xs = (chunked(delta), chunked(B_t), chunked(C_t), chunked(uf))
+
+    def chunk_body(h, inp):
+        d_c, b_c, c_c, u_c = inp                      # (B,Q,dI/..N)
+        decay = jnp.exp(d_c[..., None] * A)           # (B,Q,dI,N)
+        bx = (d_c * u_c)[..., None] * b_c[:, :, None, :]   # (B,Q,dI,N)
+        hs = _chunk_recurrence(h, decay, bx)          # (B,Q,dI,N)
+        y = jnp.einsum("bqdn,bqn->bqd", hs, c_c)      # (B,Q,dI)
+        return hs[:, -1], y
+
+    h_final, ys = lax.scan(chunk_body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, dI)
+    y = y + uf * params["D"]
+    return y.astype(u.dtype), h_final
+
+
+def mamba_block(
+    params: dict,
+    x: jax.Array,                 # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    cache: dict | None = None,    # {'conv': (B,K-1,dI), 'ssm': (B,dI,N)}
+    decode_pos: jax.Array | None = None,
+    **_unused,
+) -> tuple[jax.Array, dict | None]:
+    B, S, D = x.shape
+    dI = cfg.ssm.d_inner
+    xz = x @ params["in_proj"]                         # (B, S, 2·dI)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u = shard_hint(u, "mamba_inner")
+
+    conv_state = cache["conv"] if cache is not None else None
+    h0 = cache["ssm"] if cache is not None else None
+
+    if decode_pos is not None:
+        assert S == 1 and cache is not None
+        u_c, new_conv = _causal_conv(u, params["conv_w"], params["conv_b"],
+                                     conv_state)
+        u_c = jax.nn.silu(u_c)
+        # single-step recurrence
+        delta, B_t, C_t = _ssm_inputs(params, u_c, cfg)
+        A = -jnp.exp(params["A_log"])
+        decay = jnp.exp(delta[:, 0, :, None] * A)                    # (B,dI,N)
+        bx = (delta[:, 0] * u_c[:, 0].astype(jnp.float32))[..., None] \
+            * B_t[:, 0, None, :]
+        h = decay * h0 + bx
+        y = jnp.einsum("bdn,bn->bd", h, C_t[:, 0])[:, None, :]       # (B,1,dI)
+        y = y + u_c.astype(jnp.float32) * params["D"]
+        new_cache = {"conv": new_conv, "ssm": h}
+        y = y.astype(x.dtype)
+    else:
+        u_c, new_conv = _causal_conv(u, params["conv_w"], params["conv_b"],
+                                     conv_state)
+        u_c = jax.nn.silu(u_c)
+        y, h_final = selective_scan(params, u_c, cfg, h0)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"conv": new_conv, "ssm": h_final}
+
+    out = (y * jax.nn.silu(z)) @ params["out_proj"]
+    return out, new_cache
+
+
+def mamba_cache_spec(cfg: ModelConfig, batch: int) -> dict:
+    s = cfg.ssm
+    dt = dtype_of(cfg.compute_dtype)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, s.d_inner), dt),
+        "ssm": jax.ShapeDtypeStruct((batch, s.d_inner, s.d_state), jnp.float32),
+    }

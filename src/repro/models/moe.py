@@ -1,0 +1,243 @@
+"""Mixture-of-Experts with GShard-style *grouped* capacity dispatch, shared
+experts, and an optional dense residual branch (Arctic).
+
+Dispatch strategy (expert-parallel friendly — every step partitions cleanly
+under GSPMD, verified by the 512-device dry-runs):
+
+  1. tokens reshape to (G, T_l, D) where G = number of devices (the GShard
+     "group" dim); all routing bookkeeping (top-k, position-in-expert cumsum,
+     capacity drop) happens *within a group* — no cross-device prefix sums;
+  2. each group scatters its tokens into a local (E, C_l, D) buffer
+     (batched scatter over the sharded group dim → no collective);
+  3. buffers regroup to the expert-parallel "rows" layout (E, R, D) with E
+     sharded over 'model' and R = G·C_l rows sharded over 'data' — one
+     moderate all-to-all (the EP token exchange);
+  4. experts run a batched SwiGLU over their rows; expert weights are stored
+     FSDP-sharded (E over 'model', d_model over 'data') and all-gathered over
+     'data' per layer (transient, overlapped by the layer scan);
+  5. rows return to groups (second all-to-all) and combine with renormalized
+     router probabilities.
+
+FLOPs = top_k · T · cf · (3·D·F·2) — useful-MoE-flops × capacity factor;
+wire = 2 small all-to-alls + the FSDP weight gather.  Roofline notes: for
+expert sets much larger than the token batch (arctic-480b at 1M tokens) the
+weight gather dominates and the cell is inherently collective-bound — see
+EXPERIMENTS.md §Roofline.
+
+Capacity semantics are per-group (GShard): C_l = cf·k·T_l/E slots per expert
+per group; overflow drops are *local*, so routing decisions depend only on
+the group's own tokens (deterministic under resharding).
+
+HEFT_RT hook: per-expert load statistics returned in ``metrics`` feed
+:mod:`repro.sched_integration.expert_placement` (the paper's scheduler
+applied to expert rebalancing).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.hints import current_policy, shard_hint
+from repro.models.config import ModelConfig
+from repro.models.ffn import ffn_block, init_ffn_params
+from repro.models.layers import dense_init, dtype_of
+
+
+def init_moe_params(key, cfg: ModelConfig) -> dict:
+    assert cfg.moe is not None
+    m = cfg.moe
+    dt = dtype_of(cfg.param_dtype)
+    D, E, F = cfg.d_model, m.num_experts, m.expert_d_ff
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (D, E), jnp.float32, scale=0.02),
+        "experts": {
+            "w_gate": dense_init(ks[1], (E, D, F), dt),
+            "w_up": dense_init(ks[2], (E, D, F), dt),
+            "w_down": dense_init(ks[3], (E, F, D), dt),
+        },
+    }
+    if m.num_shared_experts > 0:
+        p["shared"] = init_ffn_params(ks[4], cfg, d_ff=m.shared_d_ff or
+                                      m.expert_d_ff * m.num_shared_experts)
+    if m.dense_residual:
+        p["dense"] = init_ffn_params(ks[5], cfg,
+                                     d_ff=m.dense_residual_d_ff or cfg.d_ff)
+    return p
+
+
+def _maybe_shard_map(dispatch_local, combine_local):
+    """Wrap dispatch/combine in shard_map over the group dim when a mesh
+    policy is installed (the 512-device dry-runs / real launches).
+
+    GSPMD cannot partition the capacity scatter/gather along a sharded batch
+    dim (it replicates — tens of GB per device at 1M tokens); shard_map makes
+    the group dim manual so every scatter/gather is device-local, while the
+    expert all-to-alls remain GSPMD-auto resharding of the shard_map outputs.
+    Without a mesh (unit tests, smoke runs) the local functions run as-is —
+    bitwise the same math.
+    """
+    pol = current_policy() or {}
+    mesh = pol.get("__mesh__")
+    gspec = pol.get("moe_groups")
+    if mesh is None or gspec is None:
+        return dispatch_local, combine_local
+
+    from jax.sharding import PartitionSpec as P
+
+    gax = gspec[0]                      # group-dim axis names
+    manual = frozenset(gax) if isinstance(gax, tuple) else frozenset((gax,))
+    g3 = P(gax, None, None)             # (G, ·, ·)
+    kg = P(None, gax, None)             # (K, G, Tl)
+
+    dispatch = jax.shard_map(
+        dispatch_local, mesh=mesh,
+        in_specs=(g3, g3), out_specs=(g3, kg, kg),
+        axis_names=manual, check_vma=False)
+    combine = jax.shard_map(
+        combine_local, mesh=mesh,
+        in_specs=(g3, kg, kg, g3), out_specs=g3,
+        axis_names=manual, check_vma=False)
+    return dispatch, combine
+
+
+def _num_groups(T: int) -> int:
+    """Fallback group count when no policy installs ``__moe_groups__``:
+    largest power-of-two ≤ min(T // 8, 256) so T_l ≥ 8 rows per group."""
+    g = 1
+    while g * 2 <= min(T // 8, 256):
+        g *= 2
+    return g
+
+
+def _group_count(T: int) -> int:
+    """Group count for the dispatch.  The launcher policy sets
+    ``__moe_groups__`` = batch × model-axis-size so that the (B, S, D) →
+    (G, T_l, D) reshape splits the sequence exactly at its existing shard
+    boundaries — the group regroup then moves ZERO bytes in both the forward
+    and backward pass (otherwise XLA inserts a full all-gather of the 30 GB
+    token tensor when transposing the reshard)."""
+    pol = current_policy() or {}
+    g = pol.get("__moe_groups__")
+    if g and T % g == 0 and T // g >= 1:
+        return g
+    return _num_groups(T)
+
+
+def capacity_for(cfg: ModelConfig, tokens_per_group: int) -> int:
+    m = cfg.moe
+    c = int(m.capacity_factor * tokens_per_group * m.top_k / m.num_experts)
+    return max(4, c)
+
+
+def moe_block(params: dict, x: jax.Array, cfg: ModelConfig
+              ) -> tuple[jax.Array, dict]:
+    """x: (B, S, D) → (out (B,S,D), metrics {aux_loss, z_loss, expert_load})."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.num_experts, m.top_k
+    G = _group_count(T)
+    Tl = T // G
+    C = capacity_for(cfg, Tl)
+
+    xt = x.reshape(G, Tl, D)
+    xt = shard_hint(xt, "moe_groups")            # P((b,m), None, None)
+
+    # --- routing (bf16 product, f32 accumulation — an f32 copy of the token
+    # tensor would cost 2× memory AND get all-gathered in the router-grad
+    # backward dot) ----------------------------------------------------------
+    logits = jnp.einsum("gtd,de->gte", xt,
+                        params["router"].astype(xt.dtype),
+                        preferred_element_type=jnp.float32)      # (G, Tl, E)
+    logits = shard_hint(logits, "moe_logits")
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)             # (G, Tl, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- load-balance & z losses (Switch/GShard style) ----------------------
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux_loss = m.router_aux_weight * E * jnp.sum(me * ce)
+    z_loss = m.router_z_weight * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # --- per-group capacity dispatch (shard_map: local scatters) ------------
+    def dispatch_local(xt_l, ids_l, keeps_init=None):
+        """xt_l (g, Tl, D); ids_l (g, Tl, K) → (buf, dests, keeps)."""
+        g = xt_l.shape[0]
+        buf = jnp.zeros((g, E * C + 1, D), dtype=xt_l.dtype)
+        scatter_rows = jax.vmap(lambda b, d, v: b.at[d].set(v))
+        dests, keeps = [], []
+        counts = jnp.zeros((g, E), jnp.int32)
+        for k in range(K):
+            ids_k = ids_l[..., k]
+            onehot = jax.nn.one_hot(ids_k, E, dtype=jnp.int32)
+            pos_k = jnp.cumsum(onehot, axis=1) - onehot          # exclusive
+            pos = jnp.take_along_axis(pos_k, ids_k[..., None], 2)[..., 0] \
+                + jnp.take_along_axis(counts, ids_k, axis=1)
+            keep = pos < C
+            dest = jnp.where(keep, ids_k * C + pos, E * C)
+            buf = scatter_rows(buf, dest, xt_l)
+            dests.append(dest)
+            keeps.append(keep)
+            counts = jnp.minimum(counts + jnp.sum(onehot, axis=1), C)
+        return buf, jnp.stack(dests), jnp.stack(keeps)           # (K,g,Tl)
+
+    def combine_local(flat_l, dests_l, keeps_l, gates_l):
+        """flat_l (g, E*C+1, D); → (g, Tl, D) f32 combine."""
+        g = flat_l.shape[0]
+        combined = jnp.zeros((g, Tl, D), jnp.float32)
+        for k in range(K):
+            wk = (gates_l[..., k] * keeps_l[k]).astype(jnp.float32)
+            picked = jnp.take_along_axis(flat_l, dests_l[k][..., None], axis=1)
+            combined = combined + picked.astype(jnp.float32) * wk[..., None]
+        return combined
+
+    dispatch_fn, combine_fn = _maybe_shard_map(dispatch_local, combine_local)
+    buf, dests, keeps = dispatch_fn(xt, expert_ids)
+    total_kept = sum(
+        jnp.sum(jax.nn.one_hot(expert_ids[..., k], E, dtype=jnp.int32)
+                * keeps[k][..., None].astype(jnp.int32), axis=(0, 1))
+        for k in range(K))
+
+    # --- regroup to expert-parallel rows layout -----------------------------
+    grouped = buf[:, : E * C].reshape(G, E, C, D)
+    rows = jnp.moveaxis(grouped, 0, 1)                          # (E, G, C, D)
+    rows = shard_hint(rows, "moe_rows4")         # P(m, b, None, None)
+    rows = rows.reshape(E, G * C, D)
+    rows = shard_hint(rows, "moe_rows")          # P(m, b, None)
+
+    # --- expert computation (batched SwiGLU over E) --------------------------
+    w = params["experts"]
+    h = jax.nn.silu(jnp.einsum("erd,edf->erf", rows, w["w_gate"])) * \
+        jnp.einsum("erd,edf->erf", rows, w["w_up"])
+    expert_out = jnp.einsum("erf,efd->erd", h, w["w_down"])     # (E, R, D)
+    expert_out = shard_hint(expert_out, "moe_rows")
+
+    # --- back to groups + combine --------------------------------------------
+    back = jnp.moveaxis(expert_out.reshape(E, G, C, D), 0, 1)   # (G, E, C, D)
+    back = shard_hint(back, "moe_groups4")       # P((b,m), None, None, None)
+    flat = jnp.concatenate(
+        [back.reshape(G, E * C, D),
+         jnp.zeros((G, 1, D), back.dtype)], axis=1)             # (G, E*C+1, D)
+    combined = combine_fn(flat, dests, keeps, gate_vals)
+
+    out = combined.astype(x.dtype).reshape(B, S, D)
+    # shared experts / dense residual run on the (B, S, D) layer-boundary
+    # layout — the group layout double-books mesh axes against the FFN's
+    # d_ff sharding and XLA falls back to full all-gathers in the backward.
+    if "shared" in params or "dense" in params:
+        xb = shard_hint(x, "layer_boundary")
+        out = shard_hint(out, "layer_boundary")
+        if "shared" in params:
+            out = out + ffn_block(params["shared"], xb, cfg)
+        if "dense" in params:
+            out = out + ffn_block(params["dense"], xb, cfg)
+
+    metrics = {"aux_loss": aux_loss, "z_loss": z_loss,
+               "expert_load": total_kept.astype(jnp.float32)}
+    return out, metrics

@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.optim.schedule import constant, inverse_sqrt, warmup_cosine
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state",
+           "constant", "inverse_sqrt", "warmup_cosine"]

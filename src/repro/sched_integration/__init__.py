@@ -1,0 +1,25 @@
+# The paper's scheduler integrated as first-class framework features:
+# MoE expert placement and serving-request dispatch.
+from repro.sched_integration.expert_placement import (
+    apply_placement,
+    makespan,
+    placement_permutation,
+    plan_expert_placement,
+    round_robin_assignment,
+)
+from repro.sched_integration.serve_scheduler import (
+    POLICIES,
+    Replica,
+    Request,
+    ServeResult,
+    default_fleet,
+    make_requests,
+    simulate_serving,
+)
+
+__all__ = [
+    "apply_placement", "makespan", "placement_permutation",
+    "plan_expert_placement", "round_robin_assignment",
+    "POLICIES", "Replica", "Request", "ServeResult", "default_fleet",
+    "make_requests", "simulate_serving",
+]

@@ -1,0 +1,3 @@
+from repro.serve.engine import HeftFrontEnd, ReplicaHandle, ServeEngine
+
+__all__ = ["HeftFrontEnd", "ReplicaHandle", "ServeEngine"]

@@ -1,0 +1,110 @@
+"""Serving engine: continuous batching with a HEFT_RT front-end scheduler.
+
+Two layers:
+
+* ``ServeEngine`` — a real decode loop (prefill + batched token-by-token
+  decode with KV/state caches) for a single replica.  Used by the examples
+  (CPU-scale models) and by launch/serve.py.
+* ``HeftFrontEnd`` — maps dynamically arriving requests onto a fleet of
+  replicas with HEFT_RT (the paper's scheduler as the admission layer; see
+  sched_integration/serve_scheduler.py for the fleet-scale simulation).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import heft_rt_numpy
+from repro.models.config import ModelConfig
+from repro.models.model import decode_step, prefill_step
+
+
+@dataclass
+class ServeEngine:
+    """Single-replica engine: batched prefill + greedy decode."""
+
+    cfg: ModelConfig
+    params: dict
+    max_len: int = 256
+
+    def __post_init__(self):
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, c, t, pos, self.cfg))
+        self._prefill = jax.jit(
+            lambda p, t: prefill_step(p, t, self.cfg, max_len=self.max_len))
+
+    def generate(self, prompts: np.ndarray, new_tokens: int,
+                 greedy: bool = True, seed: int = 0):
+        """prompts: (B, S0) int32 → (B, S0+new_tokens) generated ids."""
+        B, S0 = prompts.shape
+        logits, caches = self._prefill(self.params, jnp.asarray(prompts))
+        out = [jnp.asarray(prompts)]
+        key = jax.random.key(seed)
+        tok = None
+        for i in range(new_tokens):
+            if greedy:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits).astype(jnp.int32)
+            out.append(tok[:, None])
+            logits, caches = self._decode(self.params, caches, tok[:, None],
+                                          jnp.int32(S0 + i))
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+
+@dataclass
+class ReplicaHandle:
+    name: str
+    engine: ServeEngine
+    speed: float = 1.0             # relative throughput (heterogeneous fleet)
+    avail_at: float = 0.0          # availability-time register (T_avail)
+    processed: int = 0
+
+
+@dataclass
+class HeftFrontEnd:
+    """HEFT_RT request→replica mapper over live engines.
+
+    Mirrors the paper's runtime loop: each scheduling tick, the ready queue
+    of requests is passed with per-replica exec-time estimates and T_avail
+    registers to the HEFT_RT scheduler; commitments execute on the engines.
+    """
+
+    replicas: list[ReplicaHandle]
+
+    def estimate_s(self, prompt_len: int, new_tokens: int,
+                   replica: ReplicaHandle) -> float:
+        base = 1e-4 * prompt_len + 2e-3 * new_tokens   # host-scale estimate
+        return base / replica.speed
+
+    def schedule(self, requests: list[tuple[np.ndarray, int]]):
+        """requests: [(prompt, new_tokens)] → list of (req_idx, replica_idx)."""
+        n, p = len(requests), len(self.replicas)
+        ex = np.array([[self.estimate_s(len(pr), nt, r)
+                        for r in self.replicas] for pr, nt in requests])
+        avg = ex.mean(axis=1)
+        avail = np.array([r.avail_at for r in self.replicas])
+        order, assignment, start, finish, new_avail = heft_rt_numpy(
+            avg, ex, avail)
+        for i, r in enumerate(self.replicas):
+            r.avail_at = float(new_avail[i])
+        return [(int(order[i]), int(assignment[i])) for i in range(n)]
+
+    def run_batch(self, requests: list[tuple[np.ndarray, int]]):
+        """Schedule + execute, returning (outputs, per-replica counts)."""
+        plan = self.schedule(requests)
+        outputs: dict[int, np.ndarray] = {}
+        for req_idx, rep_idx in plan:
+            prompt, new_tokens = requests[req_idx]
+            rep = self.replicas[rep_idx]
+            t0 = time.perf_counter()
+            outputs[req_idx] = rep.engine.generate(prompt[None, :], new_tokens)
+            rep.processed += 1
+        return [outputs[i] for i in range(len(requests))], \
+            {r.name: r.processed for r in self.replicas}

@@ -1,0 +1,3 @@
+from repro.train.trainer import Trainer, TrainerConfig, make_train_step
+
+__all__ = ["Trainer", "TrainerConfig", "make_train_step"]

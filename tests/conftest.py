@@ -1,0 +1,6 @@
+import os
+
+# Keep the default test environment at ONE device — the 512-device fake mesh
+# belongs to launch/dryrun.py only (it must set XLA_FLAGS before jax import).
+# Distribution tests that need a small fake mesh spawn subprocesses.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,145 @@
+"""Core HEFT_RT / cycle model / resource model / classic-HEFT tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DAG,
+    PAPER_CRITICAL_PATH_NS,
+    SchedulerDesign,
+    critical_path_ns,
+    first_decision_worst_case,
+    heft_rt_numpy,
+    heft_static,
+    oddeven_sort_cycles,
+    per_decision_latency_ns,
+    simulate_mapping_event,
+    total_luts,
+    total_registers,
+    upward_rank,
+    worst_case_cycles,
+)
+from repro.core.resource_model import PAPER_TABLE_IV, lutram
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# cycle model — the paper's 3n+3 complexity claims
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 400), seed=st.integers(0, 2**31 - 1))
+def test_cycle_model_bounded_by_3n_plus_3(n, seed):
+    rng = np.random.default_rng(seed)
+    rep = simulate_mapping_event(rng.uniform(0, 1, n))
+    assert rep.total_cycles <= worst_case_cycles(n)
+    assert rep.first_decision_cycle <= first_decision_worst_case(n)
+    assert rep.fill_cycles == n and rep.drain_cycles == n
+
+
+def test_cycle_model_worst_case_is_tight():
+    """Ascending keys are worst-case for a descending sort: within 2 cycles
+    of the closed form (parity of the final clean checks)."""
+    for n in [4, 16, 64, 256]:
+        rep = simulate_mapping_event(np.arange(n, dtype=float))
+        assert worst_case_cycles(n) - rep.total_cycles <= 2
+
+
+def test_presorted_terminates_early():
+    n = 128
+    rep = simulate_mapping_event(np.arange(n, 0, -1, dtype=float))
+    assert rep.sort_cycles == 2  # two clean phases, nothing else
+    assert rep.total_cycles == n + 2 + 1 + n - 1
+
+
+def test_oddeven_sort_correct():
+    rng = np.random.default_rng(0)
+    keys = rng.uniform(0, 1, 101)
+    order, cycles = oddeven_sort_cycles(keys)
+    assert (np.diff(keys[order]) <= 1e-12).all()  # descending
+    assert cycles <= 101 + 2
+
+
+def test_paper_headline_9_144ns():
+    assert per_decision_latency_ns(512, PAPER_CRITICAL_PATH_NS,
+                                   asymptotic=True) == pytest.approx(9.144)
+
+
+# ---------------------------------------------------------------------------
+# resource model — Tables II–IV reproduction quality
+# ---------------------------------------------------------------------------
+
+def test_resource_model_vs_table_iv():
+    for (P, D, luts, lr, regs, bram, delay) in PAPER_TABLE_IV:
+        d = SchedulerDesign(P=P, D=D)
+        assert total_luts(d) == pytest.approx(luts, rel=0.06)
+        assert total_registers(d) == pytest.approx(regs, rel=0.10)
+        assert lutram(d) == pytest.approx(lr, rel=0.01)
+        assert critical_path_ns(d) == pytest.approx(delay, rel=0.04)
+
+
+def test_path_delay_flat_in_depth_grows_in_pes():
+    """Paper's scaling claims: D-independent, P-dependent critical path."""
+    base = critical_path_ns(SchedulerDesign(P=4, D=64))
+    assert critical_path_ns(SchedulerDesign(P=4, D=1024)) == pytest.approx(base)
+    assert critical_path_ns(SchedulerDesign(P=16, D=64)) > \
+        critical_path_ns(SchedulerDesign(P=8, D=64)) > base
+
+
+# ---------------------------------------------------------------------------
+# HEFT_RT software reference properties
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_heft_rt_priority_order_is_descending_avg(seed):
+    rng = np.random.default_rng(seed)
+    n, p = 37, 4
+    avg = rng.uniform(0, 10, n)
+    ex = rng.uniform(1, 10, (n, p))
+    order, _, _, _, _ = heft_rt_numpy(avg, ex, np.zeros(p))
+    assert (np.diff(avg[order]) <= 1e-12).all()
+
+
+def test_heft_rt_beats_worst_pe_serialization():
+    """Scheduling quality sanity: makespan ≤ running everything on one PE."""
+    rng = np.random.default_rng(1)
+    n, p = 50, 4
+    avg = rng.uniform(1, 10, n)
+    ex = rng.uniform(1, 10, (n, p))
+    _, _, _, fins, new_avail = heft_rt_numpy(avg, ex, np.zeros(p))
+    assert new_avail.max() <= ex[:, 0].sum()
+
+
+# ---------------------------------------------------------------------------
+# classic (static) HEFT baseline
+# ---------------------------------------------------------------------------
+
+def _diamond_dag():
+    comp = np.array([
+        [2.0, 1.0],
+        [3.0, 6.0],
+        [4.0, 2.0],
+        [1.0, 1.0],
+    ])
+    dag = DAG(num_tasks=4, comp=comp,
+              succ={0: [(1, 1.0), (2, 1.0)], 1: [(3, 1.0)], 2: [(3, 1.0)]})
+    return dag
+
+
+def test_upward_rank_ordering():
+    dag = _diamond_dag()
+    r = upward_rank(dag)
+    assert r[0] > max(r[1], r[2]) > r[3]  # entry highest, exit lowest
+
+
+def test_static_heft_schedules_all_respecting_deps():
+    dag = _diamond_dag()
+    s = heft_static(dag, num_pes=2)
+    assert (s.assignment >= 0).all()
+    # dependencies respected
+    for t, children in dag.succ.items():
+        for c, _ in children:
+            assert s.start[c] >= s.finish[t] - 1e-9
+    assert s.makespan <= dag.comp.min(axis=1).sum() + 10

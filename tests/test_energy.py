@@ -1,0 +1,45 @@
+"""Energy-aware HEFT_RT (the paper's future-work extension)."""
+
+import numpy as np
+import pytest
+
+from repro.core import heft_rt_numpy
+from repro.core.heft_energy import energy_pareto, heft_rt_energy_numpy
+
+
+def _soc(seed=0, n=40, p=4):
+    rng = np.random.default_rng(seed)
+    avg = rng.uniform(1, 10, n)
+    ex = rng.uniform(1, 10, (n, p))
+    power = np.array([1.0, 1.0, 1.0, 0.3])[:p]  # accelerator is efficient
+    return avg, ex, power
+
+
+def test_lambda_zero_recovers_heft_rt():
+    avg, ex, power = _soc()
+    o0, a0, s0, f0, av0 = heft_rt_numpy(avg, ex, np.zeros(4))
+    o1, a1, s1, f1, av1, _ = heft_rt_energy_numpy(avg, ex, np.zeros(4),
+                                                  power, lam=0.0)
+    np.testing.assert_array_equal(o0, o1)
+    np.testing.assert_array_equal(a0, a1)
+    np.testing.assert_allclose(av0, av1)
+
+
+def test_energy_decreases_along_lambda():
+    avg, ex, power = _soc()
+    pts = energy_pareto(avg, ex, power)
+    energies = [e for _, _, e in pts]
+    # energy is (weakly) monotone decreasing along the λ sweep
+    assert energies[-1] <= energies[0]
+    assert min(energies) < 0.95 * energies[0]  # a real trade-off exists
+
+
+def test_makespan_energy_tradeoff_is_pareto_like():
+    avg, ex, power = _soc(seed=3)
+    pts = energy_pareto(avg, ex, power)
+    lam0_makespan = pts[0][1]
+    lamN_makespan = pts[-1][1]
+    # pushing energy down costs makespan (or holds it, never improves it
+    # beyond noise): λ=0 is makespan-optimal among the sweep
+    assert lam0_makespan <= min(m for _, m, _ in pts) + 1e-9
+    assert lamN_makespan >= lam0_makespan

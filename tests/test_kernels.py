@@ -1,0 +1,146 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles.
+
+Per-kernel shape/dtype sweeps (hypothesis) asserting exact agreement with
+ref.py — sorting is integer/exact-comparison work, so equality is bitwise,
+which is precisely the paper's Fig. 3 functional-verification requirement.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import heft_rt, heft_rt_numpy
+from repro.kernels import eft_select, heft_rt_hw, oddeven_sort
+from repro.kernels import ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# odd–even transposition sort (priority queue)
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.integers(1, 300),
+    dup_range=st.integers(2, 50),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sort_matches_oracle_f32(n, dup_range, seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, dup_range, n).astype(np.float32)  # heavy ties
+    payload = np.arange(n, dtype=np.int32)
+    ks, ps = oddeven_sort(jnp.array(keys), jnp.array(payload))
+    rk, rp = ref.oddeven_sort_ref(jnp.array(keys), jnp.array(payload))
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(rk))
+    # stability: payload order must match the stable oracle exactly
+    np.testing.assert_array_equal(np.asarray(ps), np.asarray(rp))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_sort_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    if jnp.issubdtype(dtype, jnp.integer):
+        keys = jnp.array(rng.integers(-1000, 1000, 257), dtype=dtype)
+    else:
+        keys = jnp.array(rng.normal(0, 100, 257), dtype=dtype)
+    payload = jnp.arange(257, dtype=jnp.int32)
+    ks, ps = oddeven_sort(keys, payload)
+    rk, rp = ref.oddeven_sort_ref(keys, payload)
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(rk))
+    np.testing.assert_array_equal(np.asarray(ps), np.asarray(rp))
+
+
+def test_sort_sim_spec_matches_oracle():
+    """The brick-wall executable spec == stable argsort (for a power-of-two)."""
+    rng = np.random.default_rng(3)
+    keys = jnp.array(rng.integers(0, 9, 128).astype(np.float32))
+    payload = jnp.arange(128, dtype=jnp.int32)
+    sk, sp = ref.oddeven_sort_sim(keys, payload)
+    rk, rp = ref.oddeven_sort_ref(keys, payload)
+    np.testing.assert_array_equal(np.asarray(sp), np.asarray(rp))
+
+
+# ---------------------------------------------------------------------------
+# EFT selector (PE handlers + min tree)
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.integers(1, 128),
+    p=st.integers(1, 40),
+    inf_frac=st.floats(0.0, 0.4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_eft_select_matches_oracle(n, p, inf_frac, seed):
+    rng = np.random.default_rng(seed)
+    ex = rng.uniform(1, 100, (n, p)).astype(np.float32)
+    ex[rng.random((n, p)) < inf_frac] = np.inf
+    avail = rng.uniform(0, 50, p).astype(np.float32)
+    k = eft_select(jnp.array(ex), jnp.array(avail))
+    r = ref.eft_select_ref(jnp.array(ex), jnp.array(avail))
+    np.testing.assert_array_equal(np.asarray(k[0]), np.asarray(r[0]))
+    np.testing.assert_allclose(np.asarray(k[1]), np.asarray(r[1]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(k[2]), np.asarray(r[2]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(k[3]), np.asarray(r[3]), rtol=1e-6)
+
+
+def test_eft_tie_breaks_to_lowest_pe():
+    """Comparator-tree semantics: equal finish times pick the lowest index."""
+    ex = jnp.array([[5.0, 5.0, 5.0]])
+    avail = jnp.zeros(3)
+    pes, _, _, _ = eft_select(ex, avail)
+    assert int(pes[0]) == 0
+
+
+# ---------------------------------------------------------------------------
+# fused overlay (full mapping event)
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.integers(1, 200),
+    p=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_matches_software_scheduler(n, p, seed):
+    """HW kernel == software HEFT_RT == numpy twin (paper Fig. 3, exactly)."""
+    rng = np.random.default_rng(seed)
+    avg = rng.integers(1, 30, n).astype(np.float32)
+    ex = rng.uniform(1, 100, (n, p)).astype(np.float32)
+    avail = rng.uniform(0, 50, p).astype(np.float32)
+    order, pes, starts, fins, new_avail = heft_rt_hw(
+        jnp.array(avg), jnp.array(ex), jnp.array(avail))
+    sw = heft_rt(jnp.array(avg), jnp.array(ex), jnp.array(avail))
+    np.testing.assert_array_equal(np.asarray(order), np.asarray(sw.order))
+    np.testing.assert_array_equal(np.asarray(pes), np.asarray(sw.assignment))
+    np.testing.assert_allclose(np.asarray(new_avail), np.asarray(sw.new_avail),
+                               rtol=1e-6)
+    no, na, _, _, nav = heft_rt_numpy(avg, ex, avail)
+    np.testing.assert_array_equal(np.asarray(order), no)
+    np.testing.assert_array_equal(np.asarray(pes), na)
+
+
+def test_fused_invariants():
+    """Greedy-EFT invariants: starts ≥ avail, per-PE serialization."""
+    rng = np.random.default_rng(7)
+    n, p = 64, 4
+    avg = rng.uniform(1, 20, n).astype(np.float32)
+    ex = rng.uniform(1, 10, (n, p)).astype(np.float32)
+    avail = rng.uniform(0, 5, p).astype(np.float32)
+    order, pes, starts, fins, new_avail = map(
+        np.asarray, heft_rt_hw(jnp.array(avg), jnp.array(ex), jnp.array(avail)))
+    # every task assigned
+    assert (pes >= 0).all() and (pes < p).all()
+    # per-PE: tasks execute back-to-back without overlap
+    for pe in range(p):
+        mask = pes == pe
+        s, f = starts[mask], fins[mask]
+        idx = np.argsort(s)
+        assert (s[idx][1:] >= f[idx][:-1] - 1e-4).all()
+        # final availability = last finish on that PE (or untouched)
+        if mask.any():
+            np.testing.assert_allclose(new_avail[pe], f.max(), rtol=1e-6)
+    # makespan is ≥ any single task exec, ≤ serial sum
+    makespan = fins.max()
+    assert makespan <= ex.min(axis=1).sum() + avail.max() + 1e-3

@@ -1,0 +1,157 @@
+"""CEDR-runtime simulator tests: calibrated anchors + paper-trend reproduction."""
+
+import numpy as np
+import pytest
+
+from repro.runtime import (
+    HW_MODEL,
+    SW_MODEL,
+    CedrSimulator,
+    DISPATCHERS,
+    OverheadModel,
+    dispatch_earliest_idle,
+    get_app,
+    hw_compute_s,
+    hw_overhead_s,
+    paper_soc_pe_types,
+    sw_overhead_s,
+)
+from repro.runtime.workload import (
+    frames_per_second,
+    high_latency_arrivals,
+    low_latency_arrivals,
+)
+
+
+# ---------------------------------------------------------------------------
+# overhead models — calibrated to the paper's three published anchors
+# ---------------------------------------------------------------------------
+
+def test_crossover_at_queue_size_5():
+    """Paper Fig 4 inset: software wins up to n=5, hardware beyond."""
+    for n in range(1, 5):
+        assert sw_overhead_s(n) <= hw_overhead_s(n)
+    for n in range(6, 100):
+        assert sw_overhead_s(n) > hw_overhead_s(n), n
+
+
+def test_183x_compute_speedup_at_1330():
+    ratio = sw_overhead_s(1330) / hw_compute_s(1330)
+    assert ratio == pytest.approx(183.0, rel=0.02)
+
+
+def test_2_6x_end_to_end_speedup_at_1330():
+    ratio = sw_overhead_s(1330) / hw_overhead_s(1330)
+    assert ratio == pytest.approx(2.6, rel=0.05)
+
+
+def test_sw_growth_is_nlogn_hw_is_linear():
+    """Scaling shape claims from the complexity analysis."""
+    n1, n2 = 100, 1000
+    sw_ratio = sw_overhead_s(n2) / sw_overhead_s(n1)
+    assert sw_ratio == pytest.approx(10 * np.log2(n2) / np.log2(n1), rel=0.15)
+    hw_c = (hw_compute_s(n2)) / (hw_compute_s(n1))
+    assert hw_c == pytest.approx((3 * n2 + 3) / (3 * n1 + 3), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# application DAGs
+# ---------------------------------------------------------------------------
+
+def test_apps_structure():
+    for name, lo, hi in [("RC", 4, 8), ("TM", 5, 9),
+                         ("PD", 100, 140), ("TX", 60, 70)]:
+        app = get_app(name)
+        assert lo <= app.num_tasks <= hi, name
+        ex = app.exec_matrix(paper_soc_pe_types())
+        assert np.isfinite(ex[:, :3]).all()           # ARM runs everything
+        # accelerator column: finite only for FFT tasks
+        fft_rows = [i for i, t in enumerate(app.tasks)
+                    if t.task_type.startswith("fft")]
+        assert np.isfinite(ex[fft_rows, 3]).all()
+        non_fft = [i for i in range(app.num_tasks) if i not in fft_rows]
+        assert np.isinf(ex[non_fft, 3]).all()
+
+
+def test_dag_is_acyclic_and_connected():
+    for name in ["RC", "TM", "PD", "TX"]:
+        app = get_app(name)
+        succ = app.successors()
+        # topological order exists (Kahn)
+        indeg = {i: len(t.deps) for i, t in enumerate(app.tasks)}
+        q = [i for i, d in indeg.items() if d == 0]
+        seen = 0
+        while q:
+            u = q.pop()
+            seen += 1
+            for v in succ[u]:
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    q.append(v)
+        assert seen == app.num_tasks, name
+
+
+# ---------------------------------------------------------------------------
+# simulator — functional verification + performance trends (Figs 3–6)
+# ---------------------------------------------------------------------------
+
+def test_fig3_identical_mapping_decisions():
+    """HW and SW schedulers must produce identical cumulative exec times."""
+    pes = paper_soc_pe_types()
+    arr = low_latency_arrivals(100, seed=1)
+    r_sw = CedrSimulator(pes, overhead=SW_MODEL, seed=7).run(arr)
+    r_hw = CedrSimulator(pes, overhead=HW_MODEL, seed=7).run(arr)
+    assert r_sw.completed_apps == r_sw.num_apps
+    assert r_sw.avg_cumulative_exec_time == pytest.approx(
+        r_hw.avg_cumulative_exec_time, rel=1e-9)
+
+
+def test_low_rate_equivalence_and_completion():
+    pes = paper_soc_pe_types()
+    arr = high_latency_arrivals(100, seed=2)
+    for model in [SW_MODEL, HW_MODEL]:
+        r = CedrSimulator(pes, overhead=model, seed=3).run(arr)
+        assert r.completed_apps == r.num_apps
+        assert r.achieved_frame_rate == pytest.approx(100, rel=0.1)
+
+
+def test_fig6_hw_sustains_higher_saturated_rate():
+    """Oversubscribed regime: HW scheduler achieves ≥15% higher frame rate."""
+    pes = paper_soc_pe_types()
+    arr = high_latency_arrivals(600, seed=1)
+    r_sw = CedrSimulator(pes, overhead=SW_MODEL, seed=7).run(arr)
+    r_hw = CedrSimulator(pes, overhead=HW_MODEL, seed=7).run(arr)
+    assert r_hw.achieved_frame_rate > 1.15 * r_sw.achieved_frame_rate
+    # Fig 5 companion: per-app execution time lower with HW
+    assert r_hw.avg_app_exec_time < r_sw.avg_app_exec_time
+
+
+def test_queue_sizes_grow_under_oversubscription():
+    pes = paper_soc_pe_types()
+    lo = CedrSimulator(pes, overhead=SW_MODEL, seed=7).run(
+        high_latency_arrivals(100, seed=1))
+    hi = CedrSimulator(pes, overhead=SW_MODEL, seed=7).run(
+        high_latency_arrivals(600, seed=1))
+    assert hi.max_queue_size > 2 * lo.max_queue_size
+
+
+def test_heft_competitive_with_naive_dispatchers():
+    """Schedule quality: on the paper's 4-PE SoC (one heterogeneity axis —
+    the FFT accelerator) work-conserving baselines are near-optimal; HEFT_RT
+    must stay competitive (the paper compares HW vs SW HEFT, not vs naive —
+    the clear HEFT win on richly heterogeneous fleets is covered by
+    test_sched_integration.py's serving tests)."""
+    pes = paper_soc_pe_types()
+    arr = high_latency_arrivals(400, seed=5)
+    results = {}
+    for name, factory in DISPATCHERS.items():
+        r = CedrSimulator(pes, dispatch=factory(), seed=11).run(arr)
+        assert r.completed_apps == r.num_apps
+        results[name] = r.makespan
+    best = min(results.values())
+    assert results["heft_rt"] <= best * 1.20
+
+
+def test_frames_per_second_conversion():
+    # paper: >250 Mbps ≈ >241 frames/s at 1037 Kb/frame
+    assert frames_per_second(250, 1037) == pytest.approx(241.08, rel=1e-3)
