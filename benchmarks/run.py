@@ -12,9 +12,22 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
   bench_expert_placement         beyond-paper: MoE expert rebalancing
   bench_energy                   paper future-work: energy-aware HEFT_RT
   bench_roofline                 deliverable (g): per-cell roofline terms
+
+``--json`` additionally writes one ``BENCH_<module>.json`` artifact per
+module (``--outdir DIR``, default ``benchmarks/artifacts``) —
+machine-readable rows plus wall time and environment stamps, the unit the
+perf trajectory tracks across PRs.  A module-name substring as the first
+positional arg still filters which modules run:
+
+  PYTHONPATH=src:. python -m benchmarks.run serve_scheduler --json
 """
 
+import argparse
 import importlib
+import json
+import os
+import platform
+import subprocess
 import sys
 import time
 
@@ -31,21 +44,78 @@ MODULES = [
     "bench_roofline",
 ]
 
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def _git_rev() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _json_rows(rows) -> list[dict]:
+    return [{"name": name,
+             "us_per_call": us if isinstance(us, (int, float)) else str(us),
+             "derived": str(derived)}
+            for name, us, derived in rows]
+
+
+def write_artifact(outdir: str, module: str, rows, wall_s: float) -> str:
+    os.makedirs(outdir, exist_ok=True)
+    short = module[len("bench_"):] if module.startswith("bench_") else module
+    path = os.path.join(outdir, f"BENCH_{short}.json")
+    try:
+        import jax
+        jax_ver = jax.__version__
+    except Exception:
+        jax_ver = None
+    payload = {
+        "module": module,
+        "git_rev": _git_rev(),
+        "time": time.time(),
+        "wall_s": round(wall_s, 2),
+        "python": platform.python_version(),
+        "jax": jax_ver,
+        "rows": _json_rows(rows),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser(
+        description="paper/beyond-paper benchmark harness")
+    ap.add_argument("only", nargs="?", default=None,
+                    help="substring filter on module names")
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_<module>.json artifacts")
+    ap.add_argument("--outdir", default=DEFAULT_OUT, metavar="DIR",
+                    help="artifact directory for --json "
+                         "(default: benchmarks/artifacts)")
+    args = ap.parse_args()
+
     print("name,us_per_call,derived")
     for name in MODULES:
-        if only and only not in name:
+        if args.only and args.only not in name:
             continue
         mod = importlib.import_module(f"benchmarks.{name}")
         t0 = time.time()
         rows = mod.run()
+        wall = time.time() - t0
         for r in rows:
             n, us, derived = r
             us_s = f"{us:.3f}" if isinstance(us, (int, float)) else str(us)
             print(f"{n},{us_s},{derived}")
-        print(f"_bench_wall_s_{name},{time.time()-t0:.1f},-")
+        print(f"_bench_wall_s_{name},{wall:.1f},-")
+        if args.json:
+            path = write_artifact(args.outdir, name, rows, wall)
+            print(f"_bench_artifact_{name},-,{path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,100 @@
+"""repro.dist — the sharded execution substrate under the HEFT scheduler.
+
+The serving/training north-star treats heterogeneous model replicas as the
+paper's "PEs"; this package is what makes one replica an actual multi-device
+substrate.  Three layers:
+
+* :mod:`repro.dist.sharding` — **mesh sharding rules**: PartitionSpec trees
+  for params / optimizer moments / KV-state caches, plus the activation hint
+  policy the model forward consumes.
+* :mod:`repro.dist.hints` — the **hint plumbing**: a ``sharding_policy``
+  context installs a name → PartitionSpec mapping; ``shard_hint(x, name)``
+  sites inside the model blocks (attention heads, FFN hidden, Mamba inner,
+  MoE group/row layouts, layer boundaries) turn into
+  ``with_sharding_constraint`` only when a policy is active — without one
+  they are exact identities, so unit tests and smoke runs are unaffected.
+* :mod:`repro.dist.compression` — **pod-level collectives**: ``psum_mean``
+  and the int8 + error-feedback ``compressed_psum_mean`` used for cross-pod
+  gradient reduction over the slow inter-pod links.
+
+Axis conventions (used by every PartitionSpec this package emits)
+-----------------------------------------------------------------
+``MeshAxes`` names three logical mesh axes:
+
+* ``pod``   — outermost data parallelism across pods (slow links).  Params
+  and optimizer state are *replicated* over ``pod``; gradients cross it via
+  the (optionally compressed) pod collectives.  ``None`` on single-pod
+  meshes.
+* ``data``  — fast data parallelism *and* the FSDP/ZeRO-3 axis: weight
+  matrices shard their d_model-sized dim over ``data`` (``fsdp=True``) and
+  are all-gathered transiently per layer.
+* ``model`` — tensor parallelism: attention heads, FFN hidden dim, Mamba
+  d_inner, MoE experts, and the vocab dim of embed/lm_head shard over
+  ``model``.
+
+Batch-like leading dims shard over ``(pod, data)`` when a pod axis exists,
+else over ``data``.  MoE dispatch groups shard over *all* of
+``(pod, data, model)`` so the (B, S, D) → (G, T_l, D) regroup splits at
+existing shard boundaries and moves zero bytes.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+
+def _install_jax_compat() -> None:
+    """Backfill `jax.shard_map` / `jax.set_mesh` on older jax (< 0.5).
+
+    The distribution layer (and its tests) use the modern spellings; on the
+    pinned jax 0.4.x toolchain they map 1:1 onto
+    ``jax.experimental.shard_map.shard_map`` (``axis_names`` → the complement
+    of ``auto``, ``check_vma`` → ``check_rep``) and the ``Mesh`` context
+    manager.  No-op on jax versions that already provide them.
+    """
+    import jax
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                      check_vma=None, check_rep=None, auto=None):
+            if auto is None:
+                auto = (frozenset(mesh.axis_names) - frozenset(axis_names)
+                        if axis_names is not None else frozenset())
+            if check_rep is None:
+                check_rep = bool(check_vma) if check_vma is not None else True
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_rep,
+                              auto=frozenset(auto))
+
+        jax.shard_map = shard_map
+
+    if not hasattr(jax, "set_mesh"):
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            with mesh:
+                yield mesh
+
+        jax.set_mesh = set_mesh
+
+
+_install_jax_compat()
+
+from repro.dist.compression import compressed_psum_mean, psum_mean  # noqa: E402
+from repro.dist.hints import current_policy, shard_hint, sharding_policy  # noqa: E402
+from repro.dist.sharding import (  # noqa: E402
+    MeshAxes,
+    activation_hint_policy,
+    batch_pspec,
+    cache_pspecs,
+    named,
+    opt_pspecs,
+    param_pspecs,
+)
+
+__all__ = [
+    "MeshAxes", "activation_hint_policy", "batch_pspec", "cache_pspecs",
+    "compressed_psum_mean", "current_policy", "named", "opt_pspecs",
+    "param_pspecs", "psum_mean", "shard_hint", "sharding_policy",
+]

@@ -1,0 +1,91 @@
+"""Activation sharding hints: named constraint sites + the policy context.
+
+The model code never mentions mesh axes.  Instead it marks layout-critical
+tensors with ``shard_hint(x, "<site name>")``; a launcher installs a *policy*
+(name → PartitionSpec, plus a few ``__dunder__`` scalars) around tracing:
+
+    with jax.set_mesh(mesh), sharding_policy(policy):
+        jitted.lower(...)
+
+Sites present in the model stack (see sharding.activation_hint_policy for the
+defaults):
+
+    layer_boundary   (B, S, D)   residual stream between sub-layers
+    sublayer_input   (B, S, D)   post-norm block input (SP gather point)
+    attn_heads       (B, S, H, hd)   q/k/v head layouts
+    attn_kv          (B, S, KV, hd)  one-shot K/V gather before the kv scan
+    ffn_hidden       (B, S, F)   SwiGLU/GELU hidden activations
+    mamba_inner      (B, S, dI)  SSM inner stream
+    moe_groups[4]    (G, ...)    MoE dispatch group layouts
+    moe_rows[4]      (E, ...)    MoE expert-parallel row layouts
+    moe_logits       (G, Tl, E)  router logits
+    logits           (B, C, V)   unembedded logit chunks
+    embed_grad       (V, D)      scatter-added embedding cotangent
+
+Reserved non-spec keys: ``__mesh__`` (the jax Mesh used to resolve specs),
+``__moe_groups__`` (MoE dispatch group count), ``__attn_q_chunk__`` (query
+chunking override, ``"full"`` → one q block).
+
+With no policy installed every hint is an exact identity — CPU unit tests and
+smoke runs never pay for (or depend on) the distribution layer.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_state = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_state, "stack"):
+        _state.stack = []
+    return _state.stack
+
+
+def current_policy() -> dict | None:
+    """The innermost installed policy, or None."""
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def sharding_policy(policy):
+    """Install ``policy`` (a mapping) for the duration of the context.
+
+    Nested policies shadow outer ones wholesale (no merging) — a lowering
+    that wants to tweak one site copies the dict and overrides the key.
+    """
+    stack = _stack()
+    stack.append(dict(policy))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def shard_hint(x, name: str):
+    """Constrain ``x`` to the policy's layout for ``name`` (identity if none).
+
+    The spec is resolved against the policy's ``__mesh__`` and trimmed to
+    ``x.ndim`` (a too-long spec would be a hard error mid-trace; trailing
+    entries are the least significant, so trimming keeps the intent).
+    """
+    pol = current_policy()
+    if not pol:
+        return x
+    spec = pol.get(name)
+    mesh = pol.get("__mesh__")
+    if spec is None or mesh is None:
+        return x
+
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    ndim = getattr(x, "ndim", None)
+    entries = tuple(spec)
+    if ndim is not None and len(entries) > ndim:
+        entries = entries[:ndim]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*entries)))

@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.dist.hints import shard_hint
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, dtype_of
 
@@ -32,4 +33,7 @@ def ffn_block(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
         h = act(x @ params["w_gate"]) * (x @ params["w_up"])
     else:
         h = jax.nn.gelu(x @ params["w_up"])
+    # hidden stays TP-sharded: the w_down row-parallel matmul then reduces
+    # partial sums instead of all-gathering the (B, S, F) activation.
+    h = shard_hint(h, "ffn_hidden")
     return h @ params["w_down"]

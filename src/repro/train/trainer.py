@@ -83,18 +83,22 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
             loss, metrics, grads = grads_of(params, tokens, labels)
             grads, _ = reduce_fn(grads, pod_axis)
             loss = jax.lax.pmean(loss, pod_axis)
+            # per-pod metrics (ce, MoE aux) must leave the manual region
+            # replicated — the P() out_spec below asserts replication.
+            metrics = jax.tree.map(lambda v: jax.lax.pmean(v, pod_axis),
+                                   metrics)
             params, opt_state, om = adamw_update(grads, opt_state, params,
                                                  opt_cfg)
             return params, opt_state, {"loss": loss, **metrics, **om}
 
         pspec = jax.tree.map(lambda _: P(), params)
         ospec = jax.tree.map(lambda _: P(), opt_state)
-        mspec = P()
         fn = shard_map(
             body, mesh=mesh,
             in_specs=(pspec, ospec, P(pod_axis, None), P(pod_axis, None)),
-            out_specs=(pspec, ospec,
-                       {"loss": mspec, "grad_norm": mspec, "lr": mspec}),
+            # P() is a pytree *prefix*: it covers whatever metric keys the
+            # model emits (ce, aux_loss, expert_load, ...), all replicated.
+            out_specs=(pspec, ospec, P()),
             check_rep=False,
             auto=frozenset(ax for ax in mesh.axis_names if ax != pod_axis))
         return fn(params, opt_state, batch["tokens"], batch["labels"])

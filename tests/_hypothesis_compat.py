@@ -1,0 +1,96 @@
+"""`hypothesis` when installed, a seeded random-sampling fallback when not.
+
+The container image does not ship `hypothesis` (it is declared in the `dev`
+extra of pyproject.toml for environments that can install it).  Property
+tests import `given` / `settings` / `st` from this module: with the real
+library present they get full shrinking/replay behaviour; without it they
+get a deterministic fallback that draws `max_examples` pseudo-random samples
+per test (seeded from the test name, so failures reproduce) — strictly more
+coverage than skipping the modules, with zero new dependencies.
+
+Only the strategy surface this repo uses is emulated: `st.integers`,
+`st.floats`, `st.booleans`, `st.sampled_from`.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # ---- fallback ---------------------------------------
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    st = _Strategies()
+
+    class settings:  # noqa: N801 — mirrors the hypothesis API name
+        _profiles: dict = {}
+        _active: dict = {"max_examples": 20}
+
+        def __init__(self, **kw):
+            self.kw = kw
+
+        def __call__(self, fn):  # used as a decorator: pass through
+            fn._hc_settings = self.kw
+            return fn
+
+        @classmethod
+        def register_profile(cls, name, **kw):
+            cls._profiles[name] = kw
+
+        @classmethod
+        def load_profile(cls, name):
+            cls._active = {**{"max_examples": 20}, **cls._profiles.get(name, {})}
+
+    def given(**strategies):
+        def deco(fn):
+            # NOTE: deliberately not functools.wraps — the wrapper must
+            # present a ZERO-ARG signature to pytest (the drawn parameters
+            # would otherwise be collected as fixtures).
+            def wrapper():
+                eff = {**settings._active, **getattr(fn, "_hc_settings", {})}
+                n = max(1, int(eff.get("max_examples") or 20))
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = random.Random(seed)
+                for i in range(n):
+                    drawn = {k: s.example(rng) for k, s in strategies.items()}
+                    try:
+                        fn(**drawn)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"{fn.__qualname__} failed on fallback example "
+                            f"{i}/{n}: {drawn!r}") from e
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -1,0 +1,78 @@
+"""Property test: vmapped HEFT_RT agrees slot-for-slot with the numpy twin.
+
+`heft_rt_batched` is the serving scheduler's scoring path (many independent
+ready queues per fabric step); `heft_rt_numpy` is the discrete-event
+simulator's hot path.  They must make *identical* mapping decisions —
+including under duplicate `Avg_TID` keys (stable-sort tie semantics of the
+shift-register priority queue) and all-`inf` rows (unsupported tasks map to
+PE -1 and must not corrupt the availability registers).
+
+Execution times are drawn as small integers so every finish time is exactly
+representable in f32 and comparisons are bitwise, mirroring the paper's
+Fig. 3 functional-verification requirement.
+"""
+
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import heft_rt_numpy
+from repro.core.heft_rt import heft_rt_batched
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _random_queues(rng, q, n, p, dup_range, inf_frac):
+    # duplicate-heavy priorities: small integer range forces ties
+    avg = rng.integers(0, dup_range, (q, n)).astype(np.float32)
+    ex = rng.integers(1, 16, (q, n, p)).astype(np.float32)
+    # all-inf rows: task unsupported on every PE → unschedulable (-1)
+    kill = rng.random((q, n)) < inf_frac
+    ex[kill] = np.inf
+    avail = rng.integers(0, 8, (q, p)).astype(np.float32)
+    return avg, ex, avail
+
+
+@given(
+    q=st.integers(1, 6),
+    n=st.integers(1, 40),
+    p=st.integers(1, 8),
+    dup_range=st.integers(1, 6),
+    inf_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_batched_vmap_matches_numpy_per_queue(q, n, p, dup_range, inf_frac,
+                                              seed):
+    rng = np.random.default_rng(seed)
+    avg, ex, avail = _random_queues(rng, q, n, p, dup_range, inf_frac)
+
+    res = heft_rt_batched(avg, ex, avail)     # jax.vmap over the queue dim
+
+    for i in range(q):
+        order, assignment, start, finish, new_avail = heft_rt_numpy(
+            avg[i], ex[i], avail[i])
+        np.testing.assert_array_equal(np.asarray(res.order[i]), order,
+                                      err_msg="stable tie order diverged")
+        np.testing.assert_array_equal(np.asarray(res.assignment[i]),
+                                      assignment)
+        np.testing.assert_array_equal(np.asarray(res.start_time[i]), start)
+        np.testing.assert_array_equal(np.asarray(res.finish_time[i]), finish)
+        np.testing.assert_array_equal(np.asarray(res.new_avail[i]), new_avail)
+
+
+def test_all_inf_queue_leaves_avail_untouched():
+    """Every task unsupported everywhere: nothing schedules, registers hold."""
+    q, n, p = 2, 7, 3
+    avg = np.tile(np.float32([3, 3, 1, 1, 5, 0, 2]), (q, 1))  # heavy ties
+    ex = np.full((q, n, p), np.inf, np.float32)
+    avail = np.arange(q * p, dtype=np.float32).reshape(q, p)
+    res = heft_rt_batched(avg, ex, avail)
+    assert (np.asarray(res.assignment) == -1).all()
+    assert np.isinf(np.asarray(res.finish_time)).all()
+    np.testing.assert_array_equal(np.asarray(res.new_avail), avail)
+    for i in range(q):
+        order, assignment, *_ = heft_rt_numpy(avg[i], ex[i], avail[i])
+        np.testing.assert_array_equal(np.asarray(res.order[i]), order)
+        np.testing.assert_array_equal(np.asarray(res.assignment[i]),
+                                      assignment)

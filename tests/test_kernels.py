@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import heft_rt, heft_rt_numpy
 from repro.kernels import eft_select, heft_rt_hw, oddeven_sort
