@@ -30,7 +30,7 @@ def run():
                      f"first_decision={rep.first_decision_cycle}"))
     rows.append(("per_decision_ns_D512_P4",
                  per_decision_latency_ns(512, PAPER_CRITICAL_PATH_NS,
-                                         asymptotic=True) / 1e3,
+                                         asymptotic=True) / 1e3, "us",
                  "paper=9.144ns"))
     # real wall-clock of software scheduler (numpy, this host)
     for n in [16, 128, 512, 1330]:

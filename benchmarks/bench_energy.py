@@ -17,11 +17,11 @@ def run():
     avg = np.nanmean(finite, axis=1)
     power = np.array([1.0, 1.0, 1.0, 0.3])
     for lam, makespan, energy in energy_pareto(avg, ex, power):
-        rows.append((f"energy_pareto_lam{lam}", makespan * 1e3,
+        rows.append((f"energy_pareto_lam{lam}", makespan * 1e3, "ms",
                      f"energy={energy:.3f}W*ms"))
     pts = energy_pareto(avg, ex, power)
     rows.append(("energy_saving_at_max_lambda_pct",
-                 (1 - pts[-1][2] / pts[0][2]) * 100,
+                 (1 - pts[-1][2] / pts[0][2]) * 100, "pct",
                  f"makespan_cost={((pts[-1][1]/pts[0][1])-1)*100:.1f}%"))
     return rows
 

@@ -24,12 +24,12 @@ def run():
         if mbps >= 312:      # saturated region (>250 Mbps per paper)
             sat_sw.append(sw)
             sat_hw.append(hw)
-        rows.append((f"fig5_appexec_ms_{mbps}mbps", sw,
+        rows.append((f"fig5_appexec_ms_{mbps}mbps", sw, "ms",
                      f"hw={hw:.2f}ms;rate={rate:.0f}fps"))
     red = (1 - np.mean(sat_hw) / np.mean(sat_sw)) * 100
-    rows.append(("fig5_saturated_sw_ms", float(np.mean(sat_sw)), "paper=131.37"))
-    rows.append(("fig5_saturated_hw_ms", float(np.mean(sat_hw)), "paper=89.79"))
-    rows.append(("fig5_hw_reduction_pct", red, "paper=31.7%"))
+    rows.append(("fig5_saturated_sw_ms", float(np.mean(sat_sw)), "ms", "paper=131.37"))
+    rows.append(("fig5_saturated_hw_ms", float(np.mean(sat_hw)), "ms", "paper=89.79"))
+    rows.append(("fig5_hw_reduction_pct", red, "pct", "paper=31.7%"))
     return rows
 
 

@@ -25,7 +25,7 @@ def run():
             rr = round_robin_assignment(E, P)
             ms_h, ms_rr = makespan(load, speed, h), makespan(load, speed, rr)
             lower = max(load.max(), load.sum() / P)
-            rows.append((f"ep_{arch}_skew{skew}", ms_h / lower,
+            rows.append((f"ep_{arch}_skew{skew}", ms_h / lower, "x",
                          f"rr={ms_rr/lower:.3f}x_lower_bound;"
                          f"gain={(1-ms_h/ms_rr)*100:.1f}%"))
     # heterogeneous device speeds (mixed-generation pods)
@@ -35,7 +35,7 @@ def run():
     rr = round_robin_assignment(160, 16)
     rows.append(("ep_hetero_fleet_gain_pct",
                  (1 - makespan(load, speed, h) / makespan(load, speed, rr)) * 100,
-                 "16dev_mixed_speed"))
+                 "pct", "16dev_mixed_speed"))
     return rows
 
 

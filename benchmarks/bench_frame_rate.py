@@ -23,11 +23,11 @@ def run():
         if rate >= 400:
             sat_sw.append(sw)
             sat_hw.append(hw)
-        rows.append((f"fig6_achieved_at_target{rate}", sw, f"hw={hw:.1f}fps"))
+        rows.append((f"fig6_achieved_at_target{rate}", sw, "fps", f"hw={hw:.1f}fps"))
     gain = (np.mean(sat_hw) / np.mean(sat_sw) - 1) * 100
-    rows.append(("fig6_saturated_sw_fps", float(np.mean(sat_sw)), "paper=161.51"))
-    rows.append(("fig6_saturated_hw_fps", float(np.mean(sat_hw)), "paper=204.62"))
-    rows.append(("fig6_hw_gain_pct", float(gain), "paper=26.7%"))
+    rows.append(("fig6_saturated_sw_fps", float(np.mean(sat_sw)), "fps", "paper=161.51"))
+    rows.append(("fig6_saturated_hw_fps", float(np.mean(sat_hw)), "fps", "paper=204.62"))
+    rows.append(("fig6_hw_gain_pct", float(gain), "pct", "paper=26.7%"))
     return rows
 
 

@@ -29,10 +29,10 @@ def run():
         d = abs(r_sw.avg_cumulative_exec_time - r_hw.avg_cumulative_exec_time)
         deltas.append(d / r_sw.avg_cumulative_exec_time * 100)
         rows.append((f"fig3_cum_exec_ms_{mbps}mbps",
-                     r_sw.avg_cumulative_exec_time * 1e3,
+                     r_sw.avg_cumulative_exec_time * 1e3, "ms",
                      f"hw={r_hw.avg_cumulative_exec_time*1e3:.4f}ms;"
                      f"delta={deltas[-1]:.4f}%"))
-    rows.append(("fig3_avg_delta_pct", float(np.mean(deltas)),
+    rows.append(("fig3_avg_delta_pct", float(np.mean(deltas)), "pct",
                  "paper=0.32%;ours=bit-identical"))
     # direct decision equality: pallas overlay vs numpy software scheduler
     rng = np.random.default_rng(0)

@@ -17,11 +17,11 @@ def run():
     # crossover point
     cross = next(n for n in range(1, 100)
                  if sw_overhead_s(n) > hw_overhead_s(n))
-    rows.append(("fig4_crossover_queue_size", cross, "paper=5..6"))
+    rows.append(("fig4_crossover_queue_size", cross, "n", "paper=5..6"))
     rows.append(("fig4_speedup_compute_only_n1330",
-                 sw_overhead_s(1330) / hw_compute_s(1330), "paper=183x"))
+                 sw_overhead_s(1330) / hw_compute_s(1330), "x", "paper=183x"))
     rows.append(("fig4_speedup_end_to_end_n1330",
-                 sw_overhead_s(1330) / hw_overhead_s(1330), "paper=2.6x"))
+                 sw_overhead_s(1330) / hw_overhead_s(1330), "x", "paper=2.6x"))
     # measured software scheduler on this host for scale reference
     rng = np.random.default_rng(0)
     for n in [100, 1330]:

@@ -1,0 +1,70 @@
+"""Beyond-paper: fabric-batched mapping events (µs/event and events/sec).
+
+The paper amortizes per-decision scheduling cost by moving HEFT_RT into the
+FPGA fabric; this benchmark measures the TPU-side analogue: B independent
+mapping events (ready queues of depth D over P PEs) dispatched
+
+  * one-by-one through the host oracle ``heft_rt_numpy``,
+  * batched through the jitted ``MappingFabric`` (vmapped ``heft_rt``,
+    bucketed shapes, donated T_avail registers),
+  * batched through the Pallas fused-overlay backend (interpret mode off-TPU,
+    so off-TPU numbers bound the dispatch pipeline, not the kernel).
+
+Steady-state timings (compilation excluded by warmup).
+"""
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import time_call
+from repro.core import heft_rt_numpy
+from repro.sched_integration import MappingFabric
+
+D, P = 64, 8
+BATCHES = (1, 64, 256)
+
+
+def _events(rng, B):
+    avg = rng.integers(0, 6, (B, D)).astype(np.float32)
+    ex = rng.integers(1, 16, (B, D, P)).astype(np.float32)
+    avail = rng.integers(0, 8, (B, P)).astype(np.float32)
+    return avg, ex, avail
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    per_event = {}
+    for B in BATCHES:
+        avg, ex, avail = _events(rng, B)
+
+        def numpy_events():
+            for i in range(B):
+                heft_rt_numpy(avg[i], ex[i], avail[i])
+
+        us = time_call(numpy_events, repeats=5, warmup=2)
+        per_event[("numpy", B)] = us / B
+        rows.append((f"fabric_numpy_batch{B}", us / B,
+                     f"events_per_s={B / (us * 1e-6):.0f};D={D};P={P}"))
+
+        for backend in ("jit", "pallas"):
+            fab = MappingFabric(P, backend=backend)
+
+            def fabric_events():
+                jax.block_until_ready(fab.map_batch(avg, ex, avail))
+
+            us = time_call(fabric_events, repeats=5, warmup=2)
+            per_event[(backend, B)] = us / B
+            rows.append((f"fabric_{backend}_batch{B}", us / B,
+                         f"events_per_s={B / (us * 1e-6):.0f};D={D};P={P}"))
+
+    speedup = per_event[("numpy", 256)] / per_event[("jit", 256)]
+    rows.append(("fabric_jit_speedup_vs_numpy_batch256", speedup, "x",
+                 "events_per_s_ratio;acceptance>=10"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

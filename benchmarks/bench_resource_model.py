@@ -23,28 +23,28 @@ def run():
     for (P, D, luts, lr, regs, bram, delay) in PAPER_TABLE_IV:
         d = SchedulerDesign(P=P, D=D)
         err = abs(total_luts(d) - luts) / luts * 100
-        rows.append((f"tableIV_P{P}_D{D}_luts", total_luts(d),
+        rows.append((f"tableIV_P{P}_D{D}_luts", total_luts(d), "luts",
                      f"paper={luts};err={err:.1f}%"))
         derr = abs(critical_path_ns(d) - delay) / delay * 100
-        rows.append((f"tableIV_P{P}_D{D}_delay_ns", critical_path_ns(d),
+        rows.append((f"tableIV_P{P}_D{D}_delay_ns", critical_path_ns(d), "ns",
                      f"paper={delay};err={derr:.1f}%"))
     # Table II module split (P=4, D=512)
     d = SchedulerDesign(P=4, D=512)
-    rows.append(("tableII_queue_luts", queue_luts(d),
+    rows.append(("tableII_queue_luts", queue_luts(d), "luts",
                  f"paper={PAPER_TABLE_II['priority_queue']['luts']}"))
-    rows.append(("tableII_pe_handler_luts", pe_handler_luts(d),
+    rows.append(("tableII_pe_handler_luts", pe_handler_luts(d), "luts",
                  f"paper={PAPER_TABLE_II['pe_handlers']['luts']}"))
-    rows.append(("tableII_eft_selector_luts", eft_selector_luts(d),
+    rows.append(("tableII_eft_selector_luts", eft_selector_luts(d), "luts",
                  f"paper={PAPER_TABLE_II['eft_selector']['luts']}"))
     rows.append(("tableII_total_utilization_pct",
-                 utilization(d)["luts"] * 100, "paper=7.15%"))
+                 utilization(d)["luts"] * 100, "pct", "paper=7.15%"))
     # Table III comparison points
     for key, ref in PAPER_TABLE_III.items():
         d = SchedulerDesign(P=ref["P"], D=ref["D"], W_avg=ref["W"],
                             W_exec=ref["W"])
-        rows.append((f"tableIII_{key}_luts", total_luts(d),
+        rows.append((f"tableIII_{key}_luts", total_luts(d), "luts",
                      f"paper={ref['luts']}"))
-        rows.append((f"tableIII_{key}_delay_ns", critical_path_ns(d),
+        rows.append((f"tableIII_{key}_delay_ns", critical_path_ns(d), "ns",
                      f"paper={ref['delay_ns']}"))
     return rows
 

@@ -85,7 +85,7 @@ def run():
                          d.get("error", "")[:80]))
             continue
         table.append(a)
-        rows.append((f"roofline_{a['cell']}", a["compute_s"] * 1e3,
+        rows.append((f"roofline_{a['cell']}", a["compute_s"] * 1e3, "ms",
                      f"mem={a['memory_s']*1e3:.2f}ms;"
                      f"coll={a['collective_s']*1e3:.2f}ms;"
                      f"dom={a['dominant']};"
@@ -102,7 +102,7 @@ def run():
                     f"{a['dominant']},{a['roofline_fraction']:.4f},"
                     f"{a['useful_flops_ratio']:.4f},{a['temp_gb']:.2f},"
                     f"{a['arg_gb']:.2f}\n")
-    rows.append(("roofline_cells_analyzed", len(table), f"csv={out}"))
+    rows.append(("roofline_cells_analyzed", len(table), "count", f"csv={out}"))
     return rows
 
 

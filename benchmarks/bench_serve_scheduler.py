@@ -1,5 +1,8 @@
 """Beyond-paper: HEFT_RT as an LLM-serving request scheduler (heterogeneous
-replica fleet, oversubscription sweep — the paper's experiment transplanted)."""
+replica fleet, oversubscription sweep — the paper's experiment transplanted).
+
+Row values are the **mean request latency in milliseconds** (explicit-unit
+rows; an earlier revision mislabeled them under the implicit-µs field)."""
 
 from benchmarks.common import emit
 from repro.sched_integration import POLICIES, default_fleet, make_requests, simulate_serving
@@ -13,7 +16,7 @@ def run():
         reqs = make_requests(rate_rps=rate, duration_s=3.0, seed=0)
         for name, factory in POLICIES.items():
             r = simulate_serving(fleet, reqs, factory(), active_params=active)
-            rows.append((f"serve_{name}_rate{rate}", r.mean_latency * 1e3,
+            rows.append((f"serve_{name}_rate{rate}", r.mean_latency * 1e3, "ms",
                          f"achieved={r.achieved_rps:.0f}rps;"
                          f"p99={r.p99_latency*1e3:.0f}ms"))
     # headline: heft vs round-robin at heavy oversubscription
@@ -21,7 +24,7 @@ def run():
     h = simulate_serving(fleet, reqs, POLICIES["heft_rt"](), active_params=active)
     rr = simulate_serving(fleet, reqs, POLICIES["round_robin"](), active_params=active)
     rows.append(("serve_heft_latency_gain_pct",
-                 (1 - h.mean_latency / rr.mean_latency) * 100,
+                 (1 - h.mean_latency / rr.mean_latency) * 100, "pct",
                  "vs_round_robin_oversubscribed"))
     return rows
 

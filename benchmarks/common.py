@@ -1,12 +1,17 @@
 """Shared benchmark utilities: timing + CSV emission.
 
-Every benchmark module exposes ``run() -> list[row]`` where a row is
-``(name, us_per_call, derived)`` — printed as CSV by benchmarks/run.py.
+Every benchmark module exposes ``run() -> list[row]`` where a row is either
+``(name, value, derived)`` — value implicitly in microseconds — or the
+explicit-unit form ``(name, value, unit, derived)``.  benchmarks/run.py
+prints the normalized ``name,value,unit,derived`` CSV and mirrors it into
+the JSON artifacts.
 """
 
 from __future__ import annotations
 
 import time
+
+DEFAULT_UNIT = "us"
 
 
 def time_call(fn, *args, repeats: int = 5, warmup: int = 1, **kw) -> float:
@@ -22,7 +27,20 @@ def time_call(fn, *args, repeats: int = 5, warmup: int = 1, **kw) -> float:
     return times[len(times) // 2]
 
 
+def normalize_row(row) -> tuple:
+    """(name, value[, unit], derived) → (name, value, unit, derived)."""
+    if len(row) == 3:
+        name, value, derived = row
+        unit = DEFAULT_UNIT
+    elif len(row) == 4:
+        name, value, unit, derived = row
+    else:
+        raise ValueError(f"benchmark row must have 3 or 4 fields, got {row!r}")
+    return name, value, unit, derived
+
+
 def emit(rows: list) -> None:
-    for name, us, derived in rows:
-        us_s = f"{us:.3f}" if isinstance(us, (int, float)) else str(us)
-        print(f"{name},{us_s},{derived}")
+    for row in rows:
+        name, value, unit, derived = normalize_row(row)
+        vs = f"{value:.3f}" if isinstance(value, (int, float)) else str(value)
+        print(f"{name},{vs},{unit},{derived}")

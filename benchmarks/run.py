@@ -1,6 +1,8 @@
 """Benchmark harness — one module per paper table/figure + beyond-paper.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+Prints ``name,value,unit,derived`` CSV rows (benchmarks/common.py; modules
+emit 3-tuples for the implicit-µs legacy form or 4-tuples with an explicit
+unit per row).
 
   bench_cycle_model              Section VI-A complexity / 9.144 ns claim
   bench_resource_model           Tables II, III, IV
@@ -9,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
   bench_exec_vs_injection        Fig 5 (31.7% claim)
   bench_frame_rate               Fig 6 (26.7% claim)
   bench_serve_scheduler          beyond-paper: LLM serving fleet
+  bench_mapping_fabric           beyond-paper: fabric-batched mapping events
   bench_expert_placement         beyond-paper: MoE expert rebalancing
   bench_energy                   paper future-work: energy-aware HEFT_RT
   bench_roofline                 deliverable (g): per-cell roofline terms
@@ -31,6 +34,8 @@ import subprocess
 import sys
 import time
 
+from benchmarks import common
+
 MODULES = [
     "bench_cycle_model",
     "bench_resource_model",
@@ -39,6 +44,7 @@ MODULES = [
     "bench_exec_vs_injection",
     "bench_frame_rate",
     "bench_serve_scheduler",
+    "bench_mapping_fabric",
     "bench_expert_placement",
     "bench_energy",
     "bench_roofline",
@@ -59,10 +65,14 @@ def _git_rev() -> str:
 
 
 def _json_rows(rows) -> list[dict]:
-    return [{"name": name,
-             "us_per_call": us if isinstance(us, (int, float)) else str(us),
-             "derived": str(derived)}
-            for name, us, derived in rows]
+    out = []
+    for row in rows:
+        name, value, unit, derived = common.normalize_row(row)
+        out.append({"name": name,
+                    "value": value if isinstance(value, (int, float)) else str(value),
+                    "unit": unit,
+                    "derived": str(derived)})
+    return out
 
 
 def write_artifact(outdir: str, module: str, rows, wall_s: float) -> str:
@@ -100,7 +110,7 @@ def main() -> None:
                          "(default: benchmarks/artifacts)")
     args = ap.parse_args()
 
-    print("name,us_per_call,derived")
+    print("name,value,unit,derived")
     for name in MODULES:
         if args.only and args.only not in name:
             continue
@@ -108,11 +118,8 @@ def main() -> None:
         t0 = time.time()
         rows = mod.run()
         wall = time.time() - t0
-        for r in rows:
-            n, us, derived = r
-            us_s = f"{us:.3f}" if isinstance(us, (int, float)) else str(us)
-            print(f"{n},{us_s},{derived}")
-        print(f"_bench_wall_s_{name},{wall:.1f},-")
+        common.emit(rows)
+        print(f"_bench_wall_s_{name},{wall:.1f},s,-")
         if args.json:
             path = write_artifact(args.outdir, name, rows, wall)
             print(f"_bench_artifact_{name},-,{path}", file=sys.stderr)

@@ -25,6 +25,7 @@ from repro.runtime.simulator import (
     SimResult,
     dispatch_earliest_idle,
     dispatch_heft_rt,
+    make_dispatch_fabric,
 )
 from repro.runtime.workload import (
     frames_per_second,
@@ -41,7 +42,7 @@ __all__ = [
     "HW_MODEL", "SW_MODEL", "ZERO_MODEL", "OverheadModel",
     "hw_compute_s", "hw_overhead_s", "hw_transfer_s", "sw_overhead_s",
     "DISPATCHERS", "CedrSimulator", "SimResult", "dispatch_earliest_idle",
-    "dispatch_heft_rt",
+    "dispatch_heft_rt", "make_dispatch_fabric",
     "frames_per_second", "high_latency_arrivals", "injection_mbps",
     "low_latency_arrivals", "make_arrivals", "paper_injection_sweep_mbps",
 ]

@@ -39,9 +39,10 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core import heft_rt_numpy
+from repro.core import heft_rt_numpy  # noqa: F401 — re-exported oracle
 from repro.runtime.apps import AppDAG, get_app
 from repro.runtime.overhead import OverheadModel, ZERO_MODEL
+from repro.sched_integration.fabric import MappingFabric, eft_dispatch_numpy
 
 # event kinds
 ARRIVAL, TASK_DONE, MGMT_DONE = 0, 1, 2
@@ -66,26 +67,38 @@ def dispatch_heft_rt(avg, exec_times, avail, capacity):
     PE, the first ``capacity[pe]`` tasks assigned to it: the EFT availability
     chain is computed exactly as in the full algorithm, so committed
     decisions are bit-identical to the full scheduler / Pallas kernels.
+
+    Implemented by the mapping fabric's host fast path
+    (:func:`repro.sched_integration.fabric.eft_dispatch_numpy`); use
+    :func:`make_dispatch_fabric` to route mapping events through the jitted
+    or Pallas fabric backends instead.
     """
-    n, P = exec_times.shape
-    order = np.argsort(-avg, kind="stable")
-    av = avail.copy()
-    cap = capacity.copy()
-    out: list[tuple[int, int]] = []
-    remaining = int(cap.sum())
-    for t in order:
-        if remaining == 0:
-            break
-        fin = av + exec_times[t]
-        pe = int(np.argmin(fin))
-        if not np.isfinite(fin[pe]):
-            continue
-        av[pe] = fin[pe]
-        if cap[pe] > 0:
-            out.append((int(t), pe))
-            cap[pe] -= 1
-            remaining -= 1
-    return out
+    return eft_dispatch_numpy(avg, exec_times, avail, capacity)
+
+
+def make_dispatch_fabric(backend: str = "auto", **fabric_kw):
+    """Dispatch factory routing mapping events through a
+    :class:`~repro.sched_integration.fabric.MappingFabric` backend
+    (``"numpy"``, ``"jit"``, or ``"pallas"``), batched/bucketed through the
+    device pipeline for fleet-scale event streams.
+
+    Fidelity caveat: the ``"numpy"`` backend is bit-identical to
+    :func:`dispatch_heft_rt` for any float64 inputs; the device backends
+    compute in float32, so their decisions match the oracle only when
+    exec/avail values are exactly representable in f32 (EFT gaps below f32
+    resolution can resolve differently).  Continuous-valued simulator
+    workloads that need exact oracle decisions should keep
+    ``backend="numpy"``."""
+    fab: MappingFabric | None = None
+
+    def dispatch(avg, exec_times, avail, capacity):
+        nonlocal fab
+        P = exec_times.shape[1]
+        if fab is None or fab.num_pes != P:
+            fab = MappingFabric(P, backend=backend, **fabric_kw)
+        return fab.dispatch(avg, exec_times, avail, capacity)
+
+    return dispatch
 
 
 def make_dispatch_round_robin():
@@ -147,6 +160,7 @@ def make_dispatch_random(seed: int = 0):
 
 DISPATCHERS = {
     "heft_rt": lambda: dispatch_heft_rt,
+    "heft_rt_fabric": make_dispatch_fabric,
     "round_robin": make_dispatch_round_robin,
     "earliest_idle": lambda: dispatch_earliest_idle,
     "random": make_dispatch_random,

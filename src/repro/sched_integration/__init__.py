@@ -1,11 +1,19 @@
 # The paper's scheduler integrated as first-class framework features:
-# MoE expert placement and serving-request dispatch.
+# MoE expert placement, serving-request dispatch, and the fabric-batched
+# mapping-event pipeline.
 from repro.sched_integration.expert_placement import (
     apply_placement,
     makespan,
     placement_permutation,
     plan_expert_placement,
     round_robin_assignment,
+)
+from repro.sched_integration.fabric import (
+    MappingFabric,
+    eft_dispatch_numpy,
+    heft_rt_fast,
+    make_policy_fabric,
+    service_time_matrix,
 )
 from repro.sched_integration.serve_scheduler import (
     POLICIES,
@@ -20,6 +28,8 @@ from repro.sched_integration.serve_scheduler import (
 __all__ = [
     "apply_placement", "makespan", "placement_permutation",
     "plan_expert_placement", "round_robin_assignment",
+    "MappingFabric", "eft_dispatch_numpy", "heft_rt_fast",
+    "make_policy_fabric", "service_time_matrix",
     "POLICIES", "Replica", "Request", "ServeResult", "default_fleet",
     "make_requests", "simulate_serving",
 ]

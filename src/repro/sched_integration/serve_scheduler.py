@@ -11,18 +11,23 @@ bandwidth); ``T_avail`` is each replica's queue horizon.
 ``simulate_serving`` runs the oversubscription experiment (paper Figs 5/6
 transplanted): offered load sweeps past fleet capacity, and HEFT_RT is
 compared against round-robin / least-loaded / random dispatch on achieved
-throughput and latency.
+throughput and latency.  The hot path is fabric-batched (see
+:mod:`repro.sched_integration.fabric`): the (N, P) exec matrix comes from
+one vectorized roofline op, the tick loop jumps to the next arrival's event
+horizon instead of spinning empty scheduler ticks, and each mapping event
+commits its assignments with vectorized per-replica chains.
 """
 
 from __future__ import annotations
 
-import heapq
-import itertools
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core import heft_rt_numpy
+from repro.sched_integration.fabric import make_policy_fabric, service_time_matrix
+
+_INF = float("inf")
 
 
 @dataclass(frozen=True)
@@ -69,6 +74,7 @@ def make_requests(rate_rps: float, duration_s: float, seed: int = 0,
 # ---------------------------------------------------------------------------
 
 def policy_heft_rt(exec_times, avail):
+    """Reference HEFT_RT policy through the unbatched numpy oracle."""
     avg = exec_times.mean(axis=1)
     order, assignment, _, _, _ = heft_rt_numpy(avg, exec_times, avail)
     out = np.empty(exec_times.shape[0], dtype=np.int64)
@@ -77,11 +83,13 @@ def policy_heft_rt(exec_times, avail):
 
 
 def make_policy_round_robin():
-    c = itertools.count()
+    state = {"next": 0}
 
     def policy(exec_times, avail):
         n, P = exec_times.shape
-        return np.array([next(c) % P for _ in range(n)], dtype=np.int64)
+        out = (state["next"] + np.arange(n, dtype=np.int64)) % P
+        state["next"] += n
+        return out
     return policy
 
 
@@ -105,7 +113,7 @@ def make_policy_random(seed=0):
 
 
 POLICIES = {
-    "heft_rt": lambda: policy_heft_rt,
+    "heft_rt": make_policy_fabric,   # fabric front-end, oracle-identical
     "round_robin": make_policy_round_robin,
     "least_loaded": lambda: policy_least_loaded,
     "random": make_policy_random,
@@ -124,58 +132,114 @@ class ServeResult:
 
 def simulate_serving(replicas: list[Replica], requests: list[Request],
                      policy, *, active_params: float,
-                     sched_tick_s: float = 0.005) -> ServeResult:
-    """Tick-based continuous dispatch: every tick, the ready queue of arrived
-    requests is mapped by ``policy`` onto replica queues (exec-time matrix
-    from the roofline model) and committed."""
+                     sched_tick_s: float = 0.005,
+                     exec_matrix: np.ndarray | None = None) -> ServeResult:
+    """Tick-based continuous dispatch, event-horizon-driven: at every tick
+    with arrived work, the ready queue is mapped by ``policy`` onto replica
+    queues and committed in one vectorized pass; ticks with no ready work
+    fast-forward to the next arrival's tick.
+
+    ``exec_matrix`` overrides the roofline estimates with an explicit (N, P)
+    matrix aligned with ``requests`` (rows of ``+inf`` mark requests no
+    replica can serve; those are reported unserved rather than committed).
+    """
     P = len(replicas)
-    exec_cache = {}
+    N = len(requests)
+    arrivals = np.array([r.arrival for r in requests])
+    if exec_matrix is None:
+        ex_all = service_time_matrix(requests, replicas,
+                                     active_params=active_params)
+    else:
+        ex_all = np.asarray(exec_matrix, dtype=np.float64)
+    by_arrival = np.argsort(arrivals, kind="stable")
+    arr_sorted = arrivals[by_arrival]
 
-    def ex_row(req):
-        if req.rid not in exec_cache:
-            exec_cache[req.rid] = np.array([
-                service_time_s(req, r, active_params=active_params)
-                for r in replicas])
-        return exec_cache[req.rid]
+    tick = sched_tick_s
+    end = float(arrivals.max()) + 1.0
+    guard_end = end + 3600.0                     # runaway-clock guard horizon
 
-    pending = sorted(requests, key=lambda r: r.arrival)
+    free_at = [0.0] * P                          # per-replica queue horizon
+    busy = [0.0] * P
+    finish_all = np.full(N, np.nan)              # per-request finish (NaN: unserved)
+    ready: list[int] = []                        # request indices awaiting dispatch
     idx = 0
-    ready: list[Request] = []
-    free_at = np.zeros(P)
-    busy = np.zeros(P)
-    finish_times = {}
     t = 0.0
-    end = max(r.arrival for r in requests) + 1.0
-    while idx < len(pending) or ready:
-        t += sched_tick_s
-        while idx < len(pending) and pending[idx].arrival <= t:
-            ready.append(pending[idx])
-            idx += 1
+
+    while idx < N or ready:
+        t += tick
+        # Runaway-clock guard — hoisted so every tick (including empty-ready
+        # ticks and stalled backlogs) hits it before any scheduling work.
+        if t > guard_end:
+            break
+        if not ready and idx < N:
+            # Event horizon: no backlog, so fast-forward to the next
+            # arrival's tick.  The clock still *accumulates* tick-by-tick
+            # (bit-identical to the seed simulator's timeline) but the empty
+            # ticks do no scheduling work.
+            nxt = arr_sorted[idx]
+            while t < nxt and t <= guard_end:
+                t += tick
+            if t > guard_end:
+                break
+        j = int(np.searchsorted(arr_sorted, t, side="right"))
+        if j > idx:
+            ready.extend(by_arrival[idx:j].tolist())
+            idx = j
         if not ready:
             continue
-        ex = np.stack([ex_row(r) for r in ready])
-        assignment = policy(ex, np.maximum(free_at, t))
-        for r, p in zip(ready, assignment):
-            start = max(free_at[p], r.arrival, t)
-            dur = ex_row(r)[p]
-            free_at[p] = start + dur
-            busy[p] += dur
-            finish_times[r.rid] = free_at[p]
-        ready.clear()
-        if t > end + 3600:
-            break
 
-    lat = np.array([finish_times[r.rid] - r.arrival for r in requests
-                    if r.rid in finish_times])
-    span = max(finish_times.values()) - min(r.arrival for r in requests)
-    offered = len(requests) / (max(r.arrival for r in requests) + 1e-9)
+        ex = ex_all[ready]
+        assignment = policy(ex, np.maximum(free_at, t))
+        a_list = np.asarray(assignment).tolist()
+
+        # Commit pass: per-replica FIFO chains in ready order, the same
+        # scalar left-fold (max(free_at, t) then += dur) as the seed's
+        # sequential loop — bit-identical finish times, no per-request numpy.
+        ex_rows = ex.tolist()
+        committed = False
+        leftovers: list[int] = []
+        for k, p in enumerate(a_list):
+            # Unassigned (-1) or infinite-exec picks (baseline policies
+            # don't check supportability) stay in the backlog instead of
+            # permanently poisoning a replica's horizon.
+            if p < 0 or ex_rows[k][p] == _INF:
+                leftovers.append(ready[k])
+                continue
+            committed = True
+            f = free_at[p]
+            start = f if f > t else t            # arrivals are all <= t
+            fin = start + ex_rows[k][p]
+            free_at[p] = fin
+            busy[p] += ex_rows[k][p]
+            finish_all[ready[k]] = fin
+        ready = leftovers
+
+        if not committed:
+            # Nothing schedulable this event.  With no arrivals left the
+            # backlog can never drain — fast-forward into the guard.  (With
+            # arrivals pending the next tick re-maps as usual.)
+            if idx >= N:
+                t = guard_end
+            continue
+
+    served = np.isfinite(finish_all)
+    offered = N / (arrivals.max() + 1e-9)
+    if not served.any():
+        # Nothing ever scheduled (e.g. an all-+inf exec_matrix): report an
+        # empty, well-defined result instead of NaN-percentile crashes.
+        return ServeResult(offered_rps=offered, achieved_rps=0.0,
+                           p50_latency=np.nan, p99_latency=np.nan,
+                           mean_latency=np.nan,
+                           replica_util=np.zeros(P))
+    lat = finish_all[served] - arrivals[served]
+    span = np.nanmax(finish_all) - arrivals.min()
     return ServeResult(
         offered_rps=offered,
-        achieved_rps=len(finish_times) / span,
+        achieved_rps=int(served.sum()) / span,
         p50_latency=float(np.percentile(lat, 50)),
         p99_latency=float(np.percentile(lat, 99)),
         mean_latency=float(lat.mean()),
-        replica_util=busy / span,
+        replica_util=np.array(busy) / span,
     )
 
 

@@ -74,9 +74,16 @@ class HeftFrontEnd:
     Mirrors the paper's runtime loop: each scheduling tick, the ready queue
     of requests is passed with per-replica exec-time estimates and T_avail
     registers to the HEFT_RT scheduler; commitments execute on the engines.
+
+    ``fabric`` selects the mapping-event backend: ``None`` keeps the
+    unbatched ``heft_rt_numpy`` oracle; a
+    :class:`~repro.sched_integration.fabric.MappingFabric` routes events
+    through the bucketed jit/Pallas dispatch pipeline (identical decisions,
+    device-resident T_avail registers).
     """
 
     replicas: list[ReplicaHandle]
+    fabric: object | None = None      # MappingFabric, optional
 
     def estimate_s(self, prompt_len: int, new_tokens: int,
                    replica: ReplicaHandle) -> float:
@@ -90,8 +97,12 @@ class HeftFrontEnd:
                         for r in self.replicas] for pr, nt in requests])
         avg = ex.mean(axis=1)
         avail = np.array([r.avail_at for r in self.replicas])
-        order, assignment, start, finish, new_avail = heft_rt_numpy(
-            avg, ex, avail)
+        if self.fabric is not None:
+            order, assignment, start, finish, new_avail = self.fabric.map_event(
+                avg, ex, avail, update=False)
+        else:
+            order, assignment, start, finish, new_avail = heft_rt_numpy(
+                avg, ex, avail)
         for i, r in enumerate(self.replicas):
             r.avail_at = float(new_avail[i])
         return [(int(order[i]), int(assignment[i])) for i in range(n)]

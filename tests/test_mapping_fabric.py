@@ -1,0 +1,265 @@
+"""MappingFabric: bucketed/padded dispatch is slot-for-slot oracle-identical.
+
+Covers the tentpole claims of the fabric-batched mapping-event pipeline:
+
+* padded/bucketed ``map_event`` (jit and pallas backends) agrees with the
+  unpadded ``heft_rt_numpy`` oracle across bucket boundaries, duplicate
+  ``Avg_TID`` keys (stable-sort ties), and all-``inf`` rows,
+* the host fast path ``heft_rt_fast`` is bit-identical to the oracle in
+  float64 (no f32 representability caveat),
+* ``map_batch`` equals per-event oracle calls,
+* the early-exit ``dispatch`` contract equals the seed simulator's
+  reference implementation for every backend,
+* device-resident availability registers chain across events exactly like
+  host-side chaining.
+
+Device-backend draws use small integers so every finish time is exactly
+representable in f32 (the paper's Fig. 3 bitwise requirement).
+"""
+
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import heft_rt_numpy
+from repro.sched_integration import (
+    MappingFabric,
+    default_fleet,
+    eft_dispatch_numpy,
+    heft_rt_fast,
+    make_policy_fabric,
+    make_requests,
+    service_time_matrix,
+)
+from repro.sched_integration.serve_scheduler import policy_heft_rt, service_time_s
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _random_event(rng, n, p, dup_range, inf_frac):
+    avg = rng.integers(0, dup_range, n).astype(np.float32)
+    ex = rng.integers(1, 16, (n, p)).astype(np.float32)
+    kill = rng.random(n) < inf_frac
+    ex[kill] = np.inf
+    avail = rng.integers(0, 8, p).astype(np.float32)
+    return avg, ex, avail
+
+
+def _assert_matches_oracle(fab, avg, ex, avail):
+    order, assignment, start, finish, new_avail = fab.map_event(
+        avg, ex, avail, update=False)
+    o, a, s, f, na = heft_rt_numpy(avg, ex, avail)
+    np.testing.assert_array_equal(order, o, err_msg="priority order diverged")
+    np.testing.assert_array_equal(assignment, a)
+    np.testing.assert_array_equal(start, s)
+    np.testing.assert_array_equal(finish, f)
+    np.testing.assert_array_equal(new_avail, na)
+
+
+@given(
+    n=st.integers(1, 40),          # crosses the 8/16/32/64 bucket boundaries
+    p=st.integers(1, 8),
+    dup_range=st.integers(1, 6),   # small range forces duplicate keys
+    inf_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_jit_fabric_matches_oracle(n, p, dup_range, inf_frac, seed):
+    rng = np.random.default_rng(seed)
+    avg, ex, avail = _random_event(rng, n, p, dup_range, inf_frac)
+    fab = MappingFabric(p, backend="jit")
+    assert fab.bucket_size(n) >= n and fab.bucket_size(n) >= fab.min_bucket
+    _assert_matches_oracle(fab, avg, ex, avail)
+
+
+@given(
+    n=st.integers(1, 40),
+    p=st.integers(1, 8),
+    inf_frac=st.floats(0.0, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_heft_rt_fast_bit_identical_float64(n, p, inf_frac, seed):
+    """The host fast path is exact in float64 — continuous draws, no f32 grid."""
+    rng = np.random.default_rng(seed)
+    avg = rng.uniform(0, 3, n)
+    avg[rng.random(n) < 0.3] = 1.5          # inject exact duplicate keys
+    ex = rng.uniform(0.1, 5, (n, p))
+    ex[rng.random(n) < inf_frac] = np.inf
+    avail = rng.uniform(0, 2, p)
+    out = heft_rt_fast(avg, ex, avail)
+    ref = heft_rt_numpy(avg, ex, avail)
+    for got, want in zip(out, ref):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_pallas_fabric_matches_oracle_across_buckets():
+    rng = np.random.default_rng(7)
+    fab = MappingFabric(4, backend="pallas")
+    for n in (3, 8, 9):                      # below / at / across min_bucket
+        avg, ex, avail = _random_event(rng, n, 4, dup_range=3, inf_frac=0.2)
+        _assert_matches_oracle(fab, avg, ex, avail)
+
+
+def test_pallas_fabric_all_inf_rows():
+    fab = MappingFabric(3, backend="pallas")
+    avg = np.float32([2, 2, 1, 5, 5])        # duplicate keys too
+    ex = np.full((5, 3), np.inf, np.float32)
+    avail = np.float32([1, 0, 2])
+    _assert_matches_oracle(fab, avg, ex, avail)
+
+
+@given(
+    b=st.integers(1, 5),
+    n=st.integers(1, 20),
+    p=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_map_batch_matches_per_event_oracle(b, n, p, seed):
+    rng = np.random.default_rng(seed)
+    avg = rng.integers(0, 5, (b, n)).astype(np.float32)
+    ex = rng.integers(1, 16, (b, n, p)).astype(np.float32)
+    ex[rng.random((b, n)) < 0.15] = np.inf
+    avail = rng.integers(0, 8, (b, p)).astype(np.float32)
+    fab = MappingFabric(p, backend="jit")
+    res = fab.map_batch(avg, ex, avail)
+    assert res.order.shape == (b, n)
+    for i in range(b):
+        o, a, s, f, na = heft_rt_numpy(avg[i], ex[i], avail[i])
+        np.testing.assert_array_equal(np.asarray(res.order[i]), o)
+        np.testing.assert_array_equal(np.asarray(res.assignment[i]), a)
+        np.testing.assert_array_equal(np.asarray(res.start_time[i]), s)
+        np.testing.assert_array_equal(np.asarray(res.finish_time[i]), f)
+        np.testing.assert_array_equal(np.asarray(res.new_avail[i]), na)
+
+
+# ---------------------------------------------------------------------------
+# dispatch contract (runtime simulator)
+# ---------------------------------------------------------------------------
+
+def _reference_dispatch(avg, exec_times, avail, capacity):
+    """The seed simulator's early-exit dispatch, kept verbatim as the oracle."""
+    order = np.argsort(-avg, kind="stable")
+    av = avail.copy()
+    cap = capacity.copy()
+    out = []
+    remaining = int(cap.sum())
+    for t in order:
+        if remaining == 0:
+            break
+        fin = av + exec_times[t]
+        pe = int(np.argmin(fin))
+        if not np.isfinite(fin[pe]):
+            continue
+        av[pe] = fin[pe]
+        if cap[pe] > 0:
+            out.append((int(t), pe))
+            cap[pe] -= 1
+            remaining -= 1
+    return out
+
+
+@given(
+    n=st.integers(1, 40),
+    p=st.integers(1, 6),
+    depth=st.integers(0, 3),
+    inf_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dispatch_matches_seed_reference(n, p, depth, inf_frac, seed):
+    rng = np.random.default_rng(seed)
+    avg, ex, avail = _random_event(rng, n, p, dup_range=4, inf_frac=inf_frac)
+    avg = avg.astype(np.float64)
+    ex = ex.astype(np.float64)
+    avail = avail.astype(np.float64)
+    capacity = rng.integers(0, depth + 1, p)
+    want = _reference_dispatch(avg, ex, avail, capacity)
+    assert eft_dispatch_numpy(avg, ex, avail, capacity) == want
+    fab = MappingFabric(p, backend="jit")
+    assert fab.dispatch(avg, ex, avail, capacity) == want
+
+
+def test_runtime_dispatch_heft_rt_unchanged():
+    from repro.runtime import dispatch_heft_rt
+
+    rng = np.random.default_rng(3)
+    avg, ex, avail = _random_event(rng, 25, 5, dup_range=3, inf_frac=0.2)
+    capacity = np.array([1, 0, 2, 1, 1])
+    assert dispatch_heft_rt(avg, ex, avail, capacity) == \
+        _reference_dispatch(avg.astype(np.float64), ex.astype(np.float64),
+                            avail.astype(np.float64), capacity)
+
+
+# ---------------------------------------------------------------------------
+# device-resident availability registers
+# ---------------------------------------------------------------------------
+
+def test_resident_avail_chains_across_events():
+    rng = np.random.default_rng(11)
+    p = 4
+    fab = MappingFabric(p, backend="jit")
+    host_avail = np.zeros(p)
+    for _ in range(5):
+        avg, ex, _ = _random_event(rng, int(rng.integers(1, 12)), p,
+                                   dup_range=4, inf_frac=0.1)
+        *_, na = heft_rt_numpy(avg, ex, host_avail)
+        fab.map_event(avg, ex)               # resident registers, donated
+        host_avail = na
+        np.testing.assert_array_equal(fab.avail, host_avail)
+    assert fab.events == 5
+    fab.reset()
+    np.testing.assert_array_equal(fab.avail, np.zeros(p))
+
+
+def test_explicit_avail_leaves_registers_untouched():
+    rng = np.random.default_rng(12)
+    fab = MappingFabric(3, backend="jit", avail=[1.0, 2.0, 3.0])
+    avg, ex, avail = _random_event(rng, 6, 3, dup_range=4, inf_frac=0.0)
+    fab.map_event(avg, ex, avail)
+    np.testing.assert_array_equal(fab.avail, [1.0, 2.0, 3.0])
+    fab.map_event(avg, ex, update=False)     # resident but read-only
+    np.testing.assert_array_equal(fab.avail, [1.0, 2.0, 3.0])
+
+
+# ---------------------------------------------------------------------------
+# vectorized roofline front-end + policy contract
+# ---------------------------------------------------------------------------
+
+def test_service_time_matrix_bitwise_equals_scalar_loop():
+    fleet = default_fleet()
+    reqs = make_requests(rate_rps=300, duration_s=0.5, seed=4)
+    got = service_time_matrix(reqs, fleet, active_params=7e9)
+    want = np.array([[service_time_s(r, rep, active_params=7e9)
+                      for rep in fleet] for r in reqs])
+    np.testing.assert_array_equal(got, want)
+
+
+@given(
+    n=st.integers(1, 30),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fabric_policy_matches_oracle_policy(n, seed):
+    rng = np.random.default_rng(seed)
+    p = 4
+    ex = rng.uniform(0.05, 2.0, (n, p))
+    ex[rng.random(n) < 0.1] = np.inf
+    avail = rng.uniform(0, 1, p)
+    pol = make_policy_fabric()
+    np.testing.assert_array_equal(pol(ex, avail), policy_heft_rt(ex, avail))
+
+
+def test_fabric_policy_mean_tie_collision_matches_oracle():
+    """Distinct row sums can divide to the *same* mean (float division is
+    not injective); the tie set — and the stable order — must follow the
+    mean, exactly like the oracle policy."""
+    ex = np.array([[1.0, 1.0, 1.0000000000000004],
+                   [1.0, 1.0, 1.000000000000001]])
+    assert ex[0].sum() != ex[1].sum() and ex[0].mean() == ex[1].mean()
+    avail = np.zeros(3)
+    np.testing.assert_array_equal(make_policy_fabric()(ex, avail),
+                                  policy_heft_rt(ex, avail))
+
+
+def test_bucket_sizes():
+    fab = MappingFabric(4, backend="jit", min_bucket=8)
+    assert [fab.bucket_size(n) for n in (1, 8, 9, 16, 17, 100)] == \
+        [8, 8, 16, 16, 32, 128]

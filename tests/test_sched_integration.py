@@ -16,6 +16,7 @@ from repro.sched_integration import (
     placement_permutation,
     plan_expert_placement,
     round_robin_assignment,
+    service_time_matrix,
     simulate_serving,
 )
 
@@ -113,6 +114,140 @@ def test_serving_saturation_behaviour():
     hi2 = simulate_serving(fleet, make_requests(3000, 4.0, seed=1),
                            POLICIES["heft_rt"](), active_params=active)
     assert hi2.achieved_rps == pytest.approx(hi1.achieved_rps, rel=0.15)
+
+
+def test_unschedulable_request_terminates_and_does_not_poison_fleet():
+    """Regression: a request no replica can serve (exec = +inf row) used to
+    be committed to replica -1 (poisoning the last replica's horizon); now it
+    stays unserved and the hoisted runaway-clock guard ends the simulation."""
+    fleet = default_fleet()
+    reqs = make_requests(rate_rps=100, duration_s=1.0, seed=3)
+    ex = service_time_matrix(reqs, fleet, active_params=7e9)
+    poisoned = ex.copy()
+    poisoned[5, :] = np.inf                  # request 5: unsupported everywhere
+    res = simulate_serving(fleet, reqs, POLICIES["heft_rt"](),
+                           active_params=7e9, exec_matrix=poisoned)
+    clean = simulate_serving(fleet, reqs, POLICIES["heft_rt"](),
+                             active_params=7e9, exec_matrix=ex)
+    assert np.isfinite(res.p99_latency) and np.isfinite(res.mean_latency)
+    assert np.isfinite(res.replica_util).all()
+    # exactly the one poisoned request is dropped
+    assert res.achieved_rps < clean.achieved_rps
+    assert res.achieved_rps > 0.9 * clean.achieved_rps
+
+
+def test_unsupported_row_does_not_poison_baseline_policies():
+    """Baseline policies don't check supportability; the commit pass must
+    still refuse infinite-exec picks instead of setting free_at = inf."""
+    fleet = default_fleet()
+    reqs = make_requests(rate_rps=100, duration_s=1.0, seed=3)
+    ex = service_time_matrix(reqs, fleet, active_params=7e9)
+    poisoned = ex.copy()
+    poisoned[5, :] = np.inf
+    res = simulate_serving(fleet, reqs, POLICIES["round_robin"](),
+                           active_params=7e9, exec_matrix=poisoned)
+    assert np.isfinite(res.p99_latency)
+    assert np.isfinite(res.replica_util).all()
+    assert res.achieved_rps > 0
+
+
+def test_nothing_servable_returns_empty_result():
+    """All requests unschedulable: a defined empty ServeResult, no crash."""
+    fleet = default_fleet()
+    reqs = make_requests(rate_rps=50, duration_s=0.5, seed=0)
+    ex = np.full((len(reqs), len(fleet)), np.inf)
+    res = simulate_serving(fleet, reqs, POLICIES["heft_rt"](),
+                           active_params=7e9, exec_matrix=ex)
+    assert res.achieved_rps == 0.0
+    assert np.isnan(res.mean_latency) and np.isnan(res.p99_latency)
+    np.testing.assert_array_equal(res.replica_util, np.zeros(len(fleet)))
+
+
+def test_round_robin_policy_vectorized_matches_counter():
+    """The offset+arange round-robin must equal the per-request counter, and
+    the counter must persist across mapping events."""
+    import itertools
+
+    pol = POLICIES["round_robin"]()
+    c = itertools.count()
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        n, P = int(rng.integers(1, 12)), 4
+        ex = rng.uniform(0.1, 1.0, (n, P))
+        want = np.array([next(c) % P for _ in range(n)], dtype=np.int64)
+        np.testing.assert_array_equal(pol(ex, np.zeros(P)), want)
+
+
+def _reference_simulate(replicas, requests, policy, *, active_params,
+                        sched_tick_s=0.005):
+    """The seed's tick-spinning simulator, kept as the bit-identity oracle
+    for the event-horizon rewrite (well-formed workloads: every request
+    schedulable, so the seed's assignment==-1 commit bug is unreachable)."""
+    from repro.sched_integration.serve_scheduler import ServeResult, service_time_s
+
+    P = len(replicas)
+    exec_cache = {}
+
+    def ex_row(req):
+        if req.rid not in exec_cache:
+            exec_cache[req.rid] = np.array([
+                service_time_s(req, r, active_params=active_params)
+                for r in replicas])
+        return exec_cache[req.rid]
+
+    pending = sorted(requests, key=lambda r: r.arrival)
+    idx, ready = 0, []
+    free_at = np.zeros(P)
+    busy = np.zeros(P)
+    finish_times = {}
+    t = 0.0
+    end = max(r.arrival for r in requests) + 1.0
+    while idx < len(pending) or ready:
+        t += sched_tick_s
+        while idx < len(pending) and pending[idx].arrival <= t:
+            ready.append(pending[idx])
+            idx += 1
+        if not ready:
+            continue
+        ex = np.stack([ex_row(r) for r in ready])
+        assignment = policy(ex, np.maximum(free_at, t))
+        for r, p in zip(ready, assignment):
+            start = max(free_at[p], r.arrival, t)
+            dur = ex_row(r)[p]
+            free_at[p] = start + dur
+            busy[p] += dur
+            finish_times[r.rid] = free_at[p]
+        ready.clear()
+        if t > end + 3600:
+            break
+    lat = np.array([finish_times[r.rid] - r.arrival for r in requests
+                    if r.rid in finish_times])
+    span = max(finish_times.values()) - min(r.arrival for r in requests)
+    offered = len(requests) / (max(r.arrival for r in requests) + 1e-9)
+    return ServeResult(
+        offered_rps=offered,
+        achieved_rps=len(finish_times) / span,
+        p50_latency=float(np.percentile(lat, 50)),
+        p99_latency=float(np.percentile(lat, 99)),
+        mean_latency=float(lat.mean()),
+        replica_util=busy / span,
+    )
+
+
+@pytest.mark.parametrize("policy_name", ["heft_rt", "round_robin",
+                                         "least_loaded", "random"])
+def test_event_horizon_rewrite_bit_identical_to_seed(policy_name):
+    fleet = default_fleet()
+    reqs = make_requests(rate_rps=300, duration_s=1.5, seed=5)
+    got = simulate_serving(fleet, reqs, POLICIES[policy_name](),
+                           active_params=7e9)
+    want = _reference_simulate(fleet, reqs, POLICIES[policy_name](),
+                               active_params=7e9)
+    assert got.mean_latency == want.mean_latency
+    assert got.p50_latency == want.p50_latency
+    assert got.p99_latency == want.p99_latency
+    assert got.achieved_rps == want.achieved_rps
+    np.testing.assert_array_equal(got.replica_util, want.replica_util)
 
 
 def test_heft_uses_heterogeneity():
