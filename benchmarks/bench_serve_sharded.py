@@ -1,0 +1,95 @@
+"""Beyond-paper: mesh-backed heterogeneous serve fleet with dry-run cost
+models (the sharded-serve tentpole).
+
+The fleet is ``mesh_fleet`` — mixed-size mesh slices of one chip generation
+(two 16×16 pods, a 4×16, a 4×4) — and the HEFT_RT Exec_TID matrix is derived
+two ways: the analytic roofline, and the cost-model registry seeded with a
+"measured" (16×16) dry-run cell projected onto the smaller slices at 92%
+scaling efficiency.  The measured cells carry what the analytic 2·N·tokens
+roofline misses (quadratic attention FLOPs in prefill, the KV-cache stream
+in decode), so the cost-model rows are the honest numbers.
+
+Simulation rows are **deterministic** (seeded workload, exact simulated
+milliseconds) — the CI regression gate compares them at tight tolerance.
+The one wall-clock row (`exec_tid_matrix_build`) measures the registry's
+matrix materialization.
+"""
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.sched_integration import (
+    CostCell,
+    CostModelRegistry,
+    POLICIES,
+    make_requests,
+    mesh_fleet,
+    scaled_cell,
+    simulate_serving,
+)
+
+ACTIVE = 7e9                 # deepseek-7b-class serving
+MESH_SHAPES = ((16, 16), (16, 16), (4, 16), (4, 4))
+
+
+def build_registry(arch: str = "deepseek-7b") -> CostModelRegistry:
+    """Measured (16×16) prefill/decode cells, projected onto smaller slices."""
+    measured = [
+        CostCell(arch, "prefill", (16, 16), tokens_per_step=32 * 32768,
+                 flops_per_device=1.15 * 2.0 * ACTIVE * 32 * 32768 / 256,
+                 bytes_per_device=6.1e10),
+        CostCell(arch, "decode", (16, 16), tokens_per_step=128,
+                 flops_per_device=2.0 * ACTIVE * 128 / 256,
+                 bytes_per_device=1.30 * 2.0 * ACTIVE * 128 / 256),
+    ]
+    reg = CostModelRegistry(measured)
+    for cell in measured:
+        for shape in ((4, 16), (4, 4)):
+            reg.register(scaled_cell(cell, shape, efficiency=0.92))
+    return reg
+
+
+def run():
+    rows = []
+    fleet = mesh_fleet("deepseek-7b", MESH_SHAPES)
+    reg = build_registry()
+
+    results = {}
+    for rate in (400, 1600):
+        reqs = make_requests(rate_rps=rate, duration_s=3.0, seed=0)
+        for src, kw in (("roofline", {}), ("costmodel", {"cost_registry": reg})):
+            r = simulate_serving(fleet, reqs, POLICIES["heft_rt"](),
+                                 active_params=ACTIVE, **kw)
+            results[(src, rate)] = r
+            rows.append((f"serve_sharded_{src}_rate{rate}",
+                         r.mean_latency * 1e3, "ms",
+                         f"achieved={r.achieved_rps:.0f}rps;"
+                         f"p99={r.p99_latency*1e3:.0f}ms"))
+        rr = simulate_serving(fleet, reqs, POLICIES["round_robin"](),
+                              active_params=ACTIVE, cost_registry=reg)
+        rows.append((f"serve_sharded_rr_costmodel_rate{rate}",
+                     rr.mean_latency * 1e3, "ms",
+                     f"achieved={rr.achieved_rps:.0f}rps"))
+
+    # derived (exempt from the gate): how much latency the analytic roofline
+    # underestimates by hiding attention/KV overheads, at oversubscription
+    h, c = results[("roofline", 1600)], results[("costmodel", 1600)]
+    rows.append(("serve_sharded_costmodel_vs_roofline_latency_pct",
+                 (c.mean_latency / h.mean_latency - 1) * 100, "pct",
+                 "costmodel_exec_tid_minus_roofline"))
+
+    # registry throughput: Exec_TID materialization for one big mapping
+    # event.  Wall-clock, so emitted as a `_`-bookkeeping row — informational
+    # in the artifact, exempt from the regression gate (the module's ms rows
+    # are deterministic and gate at tight tolerance).
+    reqs = make_requests(rate_rps=1600, duration_s=3.0, seed=0)
+    us = time_call(lambda: reg.exec_tid_matrix(reqs, fleet,
+                                               active_params=ACTIVE),
+                   repeats=5, warmup=1)
+    rows.append(("_exec_tid_matrix_build", us, "us",
+                 f"N={len(reqs)};P={len(fleet)};cells={len(reg)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

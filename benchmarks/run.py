@@ -11,6 +11,7 @@ unit per row).
   bench_exec_vs_injection        Fig 5 (31.7% claim)
   bench_frame_rate               Fig 6 (26.7% claim)
   bench_serve_scheduler          beyond-paper: LLM serving fleet
+  bench_serve_sharded            beyond-paper: mesh-backed fleet + cost model
   bench_mapping_fabric           beyond-paper: fabric-batched mapping events
   bench_expert_placement         beyond-paper: MoE expert rebalancing
   bench_energy                   paper future-work: energy-aware HEFT_RT
@@ -23,6 +24,17 @@ perf trajectory tracks across PRs.  A module-name substring as the first
 positional arg still filters which modules run:
 
   PYTHONPATH=src:. python -m benchmarks.run serve_scheduler --json
+
+``--check BASELINE.json [--tolerance 0.25]`` is the CI regression gate: the
+freshly generated rows are compared against a tracked artifact (rows matched
+on name+unit; directional by unit — a >tolerance rise in a time-like unit or
+drop in a throughput-like unit is a regression).  Ratio rows derived from
+other rows (``x``/``pct`` units) and ``_``-prefixed bookkeeping rows are
+exempt.  Exit status 1 on any regression, so CI fails instead of silently
+uploading worse artifacts:
+
+  PYTHONPATH=src:. python -m benchmarks.run serve_scheduler \\
+      --check benchmarks/artifacts/BENCH_serve_scheduler.json
 """
 
 import argparse
@@ -44,6 +56,7 @@ MODULES = [
     "bench_exec_vs_injection",
     "bench_frame_rate",
     "bench_serve_scheduler",
+    "bench_serve_sharded",
     "bench_mapping_fabric",
     "bench_expert_placement",
     "bench_energy",
@@ -51,6 +64,15 @@ MODULES = [
 ]
 
 DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "artifacts")
+
+# Regression-gate direction by unit: -1 → lower is better (a rise beyond
+# tolerance regresses), +1 → higher is better (a drop regresses).  Units not
+# listed here — ratio/derived rows ("x", "pct"), counts, free-form — are
+# informational and exempt from the gate.
+CHECK_DIRECTION = {
+    "ns": -1, "us": -1, "ms": -1, "s": -1,
+    "events/s": 1, "rps": 1, "tok/s": 1, "frames/s": 1, "GB/s": 1,
+}
 
 
 def _git_rev() -> str:
@@ -98,6 +120,42 @@ def write_artifact(outdir: str, module: str, rows, wall_s: float) -> str:
     return path
 
 
+def check_rows(rows, baseline: dict, tolerance: float) -> list[str]:
+    """Compare fresh rows to a tracked artifact's rows.
+
+    Matching is on (name, unit); the unit picks the regression direction
+    (see CHECK_DIRECTION).  Derived ratio rows (unlisted units such as
+    ``x``/``pct``), ``_``-prefixed bookkeeping rows, non-numeric values, and
+    rows absent from the baseline are exempt.  Returns human-readable
+    regression descriptions (empty → gate passes).
+    """
+    base = {(r["name"], r["unit"]): r["value"] for r in baseline.get("rows", [])
+            if isinstance(r.get("value"), (int, float))}
+    problems = []
+    for row in rows:
+        name, value, unit, _ = common.normalize_row(row)
+        direction = CHECK_DIRECTION.get(unit)
+        if (direction is None or name.startswith("_")
+                or not isinstance(value, (int, float))):
+            continue
+        old = base.get((name, unit))
+        if old is None:
+            continue
+        # Multiplicative in both directions so tolerance >= 1 stays
+        # meaningful (an additive 1-tolerance drop-floor would go negative
+        # and silently disable the throughput gate).
+        if direction < 0:   # time-like: a rise beyond tolerance regresses
+            bad = value > old * (1.0 + tolerance) and value - old > 1e-12
+        else:               # throughput-like: a drop beyond tolerance
+            bad = value < old / (1.0 + tolerance)
+        if bad:
+            pct = (value / old - 1.0) * 100 if old else float("inf")
+            problems.append(
+                f"{name} [{unit}]: {old:.4g} -> {value:.4g} ({pct:+.1f}%, "
+                f"tolerance ±{tolerance * 100:.0f}%)")
+    return problems
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
         description="paper/beyond-paper benchmark harness")
@@ -108,8 +166,22 @@ def main() -> None:
     ap.add_argument("--outdir", default=DEFAULT_OUT, metavar="DIR",
                     help="artifact directory for --json "
                          "(default: benchmarks/artifacts)")
+    ap.add_argument("--check", metavar="BASELINE.json", default=None,
+                    help="benchmark-regression gate: compare generated rows "
+                         "against this tracked artifact and exit 1 on a "
+                         ">tolerance regression")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative regression tolerance for --check "
+                         "(default 0.25)")
     args = ap.parse_args()
 
+    baseline = None
+    if args.check:
+        with open(args.check) as f:
+            baseline = json.load(f)
+
+    regressions = []
+    checked = 0
     print("name,value,unit,derived")
     for name in MODULES:
         if args.only and args.only not in name:
@@ -120,9 +192,38 @@ def main() -> None:
         wall = time.time() - t0
         common.emit(rows)
         print(f"_bench_wall_s_{name},{wall:.1f},s,-")
+        module_regs: list[str] = []
+        if baseline is not None and baseline.get("module") in (name, None):
+            checked += 1
+            module_regs = check_rows(rows, baseline, args.tolerance)
+            regressions += module_regs
         if args.json:
-            path = write_artifact(args.outdir, name, rows, wall)
-            print(f"_bench_artifact_{name},-,{path}", file=sys.stderr)
+            if module_regs:
+                # Never let a regressed run overwrite its own baseline: a
+                # rerun of the gate would then silently pass.
+                print(f"_bench_artifact_{name},-,skipped (regression gate)",
+                      file=sys.stderr)
+            else:
+                path = write_artifact(args.outdir, name, rows, wall)
+                print(f"_bench_artifact_{name},-,{path}", file=sys.stderr)
+
+    if baseline is not None:
+        if checked == 0:
+            # A baseline that matched no module that ran must be loud: a
+            # typo'd path/filter would otherwise turn the gate into a no-op.
+            print(f"[check] baseline module "
+                  f"{baseline.get('module')!r} did not match any module "
+                  f"that ran — wrong --check path or filter?",
+                  file=sys.stderr)
+            sys.exit(2)
+        if regressions:
+            print(f"[check] {len(regressions)} benchmark regression(s) vs "
+                  f"{args.check}:", file=sys.stderr)
+            for p in regressions:
+                print(f"[check]   {p}", file=sys.stderr)
+            sys.exit(1)
+        print(f"[check] OK — no regressions vs {args.check} "
+              f"(tolerance ±{args.tolerance * 100:.0f}%)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -91,10 +91,12 @@ from repro.dist.sharding import (  # noqa: E402
     named,
     opt_pspecs,
     param_pspecs,
+    replica_pspecs,
 )
 
 __all__ = [
     "MeshAxes", "activation_hint_policy", "batch_pspec", "cache_pspecs",
     "compressed_psum_mean", "current_policy", "named", "opt_pspecs",
-    "param_pspecs", "psum_mean", "shard_hint", "sharding_policy",
+    "param_pspecs", "psum_mean", "replica_pspecs", "shard_hint",
+    "sharding_policy",
 ]

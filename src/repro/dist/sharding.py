@@ -169,15 +169,22 @@ def opt_pspecs(param_pspecs, moment_dtype: str, ax: MeshAxes, *,
     return {"step": P(), "m": m, "v": m}
 
 
-def batch_pspec(ax: MeshAxes, shape_cfg: ShapeConfig | None = None) -> P:
-    """(B, S) token/label batches: batch over (pod,)data, sequence local."""
-    return P(ax.batch, None)
+def batch_pspec(ax: MeshAxes, shape_cfg: ShapeConfig | None = None, *,
+                batch_shard: bool = True) -> P:
+    """(B, S) token/label batches: batch over (pod,)data, sequence local.
+
+    ``batch_shard=False`` replicates the batch dim — the serve-replica
+    layout, where per-request batches are tiny and the mesh slice's
+    parallelism is all tensor/FSDP.
+    """
+    return P(ax.batch if batch_shard else None, None)
 
 
-def _cache_rule(keys: list[str], ax: MeshAxes, seq_shard: bool) -> P:
+def _cache_rule(keys: list[str], ax: MeshAxes, seq_shard: bool,
+                batch_shard: bool = True) -> P:
     stacked = "stages" in keys
     name = keys[-1]
-    b, m = ax.batch, ax.model
+    b, m = ax.batch if batch_shard else None, ax.model
     if name in ("k", "v"):            # (B, Smax, KV, hd)
         spec = P(b, m, None, None) if seq_shard else P(b, None, m, None)
     elif name in ("ckv", "kr"):       # MLA latent (B, Smax, R/rope)
@@ -192,24 +199,27 @@ def _cache_rule(keys: list[str], ax: MeshAxes, seq_shard: bool) -> P:
 
 
 def cache_pspecs(cfg: ModelConfig, ax: MeshAxes, shape_cfg: ShapeConfig, *,
-                 seq_shard: bool = False):
+                 seq_shard: bool = False, batch_shard: bool = True):
     """Specs for the KV/SSM cache tree of ``model.cache_specs``.
 
     Default: batch over (pod,)data and KV heads over ``model``.
     ``seq_shard=True`` is the flash-decode layout — cache *sequence* over
     ``model`` (padding-free for every head count; see hillclimb
-    ``flashdecode``).
+    ``flashdecode``).  ``batch_shard=False`` replicates the batch dim
+    (serve-replica layout).
     """
     specs = model_mod.cache_specs(cfg, shape_cfg.global_batch,
                                   shape_cfg.seq_len)
     return tree_map_with_path(
-        lambda path, leaf: _cache_rule(_path_keys(path), ax, seq_shard),
+        lambda path, leaf: _cache_rule(_path_keys(path), ax, seq_shard,
+                                       batch_shard),
         specs)
 
 
 def activation_hint_policy(cfg: ModelConfig, ax: MeshAxes,
                            shape_cfg: ShapeConfig, *,
-                           model_axis_size: int | None = None) -> dict:
+                           model_axis_size: int | None = None,
+                           batch_shard: bool = True) -> dict:
     """Default name → PartitionSpec policy for the model's hint sites.
 
     Baseline layout: batch-like dims over (pod,)data everywhere; sequence
@@ -221,9 +231,11 @@ def activation_hint_policy(cfg: ModelConfig, ax: MeshAxes,
 
     ``model_axis_size`` additionally pins ``__moe_groups__`` =
     global_batch × model-axis-size — the group count for which the regroup
-    moves zero bytes (see moe._group_count).
+    moves zero bytes (see moe._group_count).  ``batch_shard=False``
+    replicates batch-like dims (the serve-replica layout: tensor-parallel
+    heads/hidden only, request batches too small to split).
     """
-    b, m = ax.batch, ax.model
+    b, m = ax.batch if batch_shard else None, ax.model
     seq = m if shape_cfg.kind in ("train", "prefill") else None
     pol: dict = {
         "layer_boundary": P(b, seq, None),
@@ -253,3 +265,25 @@ def activation_hint_policy(cfg: ModelConfig, ax: MeshAxes,
             pol["moe_logits"] = P(gax, None, None)
             pol["__moe_groups__"] = shape_cfg.global_batch * model_axis_size
     return pol
+
+
+def replica_pspecs(cfg: ModelConfig, ax: MeshAxes, *, fsdp: bool = True,
+                   seq_shard: bool = False) -> dict:
+    """Spec bundle for one mesh-backed serve replica (see serve/engine.py).
+
+    A replica's mesh slice parallelizes the *model* (TP heads/hidden, FSDP
+    weights), never the request batch — per-request batches are tiny, so
+    batch-like dims replicate and any slice shape serves any batch size.
+    Returns ``{"params", "cache", "batch", "policy"}``: PartitionSpec trees
+    for the three input groups plus the activation hint policy (sans
+    ``__mesh__``, which the engine binds to its concrete slice).
+    """
+    shape_cfg = ShapeConfig("serve", "decode", 1, 1)   # structure-only
+    return {
+        "params": param_pspecs(cfg, ax, fsdp=fsdp),
+        "cache": cache_pspecs(cfg, ax, shape_cfg, seq_shard=seq_shard,
+                              batch_shard=False),
+        "batch": batch_pspec(ax, shape_cfg, batch_shard=False),
+        "policy": activation_hint_policy(cfg, ax, shape_cfg,
+                                         batch_shard=False),
+    }

@@ -24,7 +24,6 @@ os.environ["XLA_FLAGS"] = (
 
 import argparse      # noqa: E402
 import json          # noqa: E402
-import re            # noqa: E402
 import time          # noqa: E402
 import traceback     # noqa: E402
 
@@ -40,7 +39,10 @@ from repro.dist.sharding import (                             # noqa: E402
     opt_pspecs,
     param_pspecs,
 )
-from repro.launch.hlo_analysis import analyze_hlo                # noqa: E402
+from repro.launch.hlo_analysis import (                          # noqa: E402
+    collective_stats,
+    summarize_compiled,
+)
 from repro.launch.mesh import make_production_mesh, mesh_axes  # noqa: E402
 from repro.launch.specs import (                               # noqa: E402
     build_step,
@@ -55,50 +57,11 @@ from repro.optim.adamw import init_opt_state                   # noqa: E402
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
                             "..", "..", "..", "experiments", "artifacts", "dryrun")
 
-# ---------------------------------------------------------------------------
-# collective-bytes extraction from the partitioned HLO
-# ---------------------------------------------------------------------------
+# collective_stats / summarize_compiled live in hlo_analysis (import-light:
+# no XLA_FLAGS side effects) and are re-exported here for compatibility.
 
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
-                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
-                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8}
-
-_COLL_RE = re.compile(
-    r"=\s+(?:\(([^)]*)\)|(\w+\[[\d,]*\]))\S*\s+"
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-# wire-byte convention per op, as a multiple of the per-device RESULT bytes
-# (ring algorithms; n = group size is folded into the convention):
-#   all-gather        result is the gathered buffer      → ×1
-#   all-reduce        reduce-scatter + all-gather        → ×2
-#   reduce-scatter    sends ≈ full input ≈ result × n    → ×1 of input ≈ ×1·n
-#   all-to-all        permutes the full buffer           → ×1
-#   collective-permute one hop                           → ×1
-_WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
-                "all-to-all": 1.0, "collective-permute": 1.0}
-
-
-def _shape_bytes(dtype: str, dims: str) -> int:
-    n = 1
-    for d in dims.split(","):
-        if d:
-            n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
-
-
-def collective_stats(hlo_text: str) -> dict:
-    per_op: dict[str, float] = {}
-    count: dict[str, int] = {}
-    for m in _COLL_RE.finditer(hlo_text):
-        tuple_part, single, op = m.group(1), m.group(2), m.group(3)
-        text = tuple_part if tuple_part else single
-        size = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(text))
-        per_op[op] = per_op.get(op, 0.0) + size * _WIRE_FACTOR[op]
-        count[op] = count.get(op, 0) + 1
-    return {"bytes_by_op": per_op,
-            "count_by_op": count,
-            "total_wire_bytes_per_device": sum(per_op.values())}
+__all__ = ["collective_stats", "summarize_compiled", "dryrun_cell",
+           "cell_path", "run_all"]
 
 
 # ---------------------------------------------------------------------------
@@ -186,22 +149,7 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-    mem = compiled.memory_analysis()
-    mem_info = {}
-    for k in ("temp_size_in_bytes", "argument_size_in_bytes",
-              "output_size_in_bytes", "alias_size_in_bytes",
-              "generated_code_size_in_bytes"):
-        mem_info[k] = getattr(mem, k, None)
-
-    cost = compiled.cost_analysis()
-    if isinstance(cost, list):
-        cost = cost[0] if cost else {}
-    flops = float(cost.get("flops", 0.0))
-    bytes_accessed = float(cost.get("bytes accessed", 0.0))
-
-    hlo = compiled.as_text()
-    coll = collective_stats(hlo)           # unweighted op inventory
-    weighted = analyze_hlo(hlo)            # trip-count-weighted (roofline)
+    summary = summarize_compiled(compiled)   # XLA cost + collectives + roofline
 
     out = {
         "arch": arch, "shape": shape_name,
@@ -210,15 +158,11 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
         "fsdp": fsdp,
         "params": cfg.param_count(),
         "active_params": cfg.active_param_count(),
-        "flops_per_device": flops,                       # XLA (body-once)
-        "bytes_accessed_per_device": bytes_accessed,     # XLA (body-once)
-        "weighted": weighted,                            # trip-weighted
-        "collectives": coll,
-        "memory": mem_info,
+        **summary,
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
-        "hlo_chars": len(hlo),
     }
     if verbose:
+        weighted, mem_info = summary["weighted"], summary["memory"]
         print(f"[dryrun] {arch} × {shape_name} × {out['mesh']}: "
               f"compile OK ({t_compile:.1f}s) "
               f"wflops/dev={weighted['dot_flops_per_device']:.3e} "

@@ -202,3 +202,62 @@ def analyze_hlo(hlo: str, unknown_trip: int = 1) -> dict:
         "num_computations": len(comps),
         "unknown_trip_whiles": unknown_trips,
     }
+
+
+# ---------------------------------------------------------------------------
+# unweighted collective inventory + compiled-step summary
+# ---------------------------------------------------------------------------
+
+def collective_stats(hlo_text: str) -> dict:
+    """Unweighted collective inventory: wire bytes + op counts, body-once.
+
+    The companion to :func:`analyze_hlo` (which trip-weights): one entry per
+    collective *definition* in the partitioned module, using the same ring
+    wire-byte conventions.  Import-light (pure regex) so tests and the
+    serve cost-model can use it without the dry-run's XLA_FLAGS side
+    effects.
+    """
+    per_op: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for m in _COLL.finditer(hlo_text):
+        tuple_part, single, op = m.group(1), m.group(2), m.group(3)
+        text = tuple_part if tuple_part else single
+        size = sum(_bytes_of(d, dims) for d, dims in _SHAPE.findall(text))
+        per_op[op] = per_op.get(op, 0.0) + size * _WIRE_FACTOR[op]
+        count[op] = count.get(op, 0) + 1
+    return {"bytes_by_op": per_op,
+            "count_by_op": count,
+            "total_wire_bytes_per_device": sum(per_op.values())}
+
+
+_MEM_FIELDS = ("temp_size_in_bytes", "argument_size_in_bytes",
+               "output_size_in_bytes", "alias_size_in_bytes",
+               "generated_code_size_in_bytes")
+
+
+def summarize_compiled(compiled) -> dict:
+    """Cost summary of one compiled step: XLA memory/cost analyses plus the
+    collective inventory and trip-weighted roofline terms.
+
+    The shared back-end of ``dryrun_cell`` and the tiny-mesh tests: the
+    returned ``flops_per_device`` / ``bytes_accessed_per_device`` /
+    ``collectives`` keys are exactly what
+    :meth:`repro.sched_integration.cost_model.CostCell.from_dryrun` consumes.
+    """
+    mem = compiled.memory_analysis()
+    mem_info = {k: getattr(mem, k, None) for k in _MEM_FIELDS}
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    cost = cost or {}
+
+    hlo = compiled.as_text()
+    return {
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", 0.0)),
+        "weighted": analyze_hlo(hlo),
+        "collectives": collective_stats(hlo),
+        "memory": mem_info,
+        "hlo_chars": len(hlo),
+    }

@@ -7,7 +7,12 @@ sets XLA_FLAGS before any import for exactly this reason).
 
 from __future__ import annotations
 
+import math
+
+import numpy as np
+
 import jax
+from jax.sharding import Mesh
 
 from repro.dist.sharding import MeshAxes
 
@@ -22,6 +27,35 @@ def mesh_axes(*, multi_pod: bool = False) -> MeshAxes:
     return MeshAxes(pod="pod" if multi_pod else None)
 
 
-def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
-    """Small mesh for unit tests (requires enough local devices)."""
-    return jax.make_mesh(shape, axes)
+def make_debug_mesh(shape=(2, 2), axes=("data", "model"), devices=None):
+    """Small mesh for unit tests (requires enough local devices).
+
+    ``devices`` pins an explicit device list (len == prod(shape)) — the
+    building block for carving one host's pool into disjoint replica slices.
+    """
+    if devices is None:
+        return jax.make_mesh(shape, axes)
+    devs = np.asarray(devices, dtype=object).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def slice_device_pool(shapes, axes=("data", "model"), devices=None):
+    """Partition a device pool into disjoint mesh slices, one per shape.
+
+    The heterogeneous-fleet constructor: ``shapes=[(1, 1), (2, 1), (2, 2)]``
+    carves 7 of the pool's devices into three replicas of mixed size (the
+    paper's non-uniform PEs).  Slices never share devices; a pool too small
+    for the requested shapes raises.
+    """
+    pool = list(jax.devices()) if devices is None else list(devices)
+    need = sum(math.prod(s) for s in shapes)
+    if need > len(pool):
+        raise ValueError(
+            f"device pool has {len(pool)} devices; shapes {list(shapes)} "
+            f"need {need}")
+    meshes, off = [], 0
+    for shape in shapes:
+        n = math.prod(shape)
+        meshes.append(make_debug_mesh(tuple(shape), axes, pool[off:off + n]))
+        off += n
+    return meshes

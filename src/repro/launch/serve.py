@@ -1,10 +1,14 @@
 """Serving launcher — batched-request demo with the HEFT_RT front end.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --requests 12
+  PYTHONPATH=src python -m repro.launch.serve --sharded    # mesh-backed fleet
 
-Builds a small heterogeneous "fleet" of replicas of a smoke-config model
-(speed factors emulate mixed pods), maps dynamically arriving requests with
-HEFT_RT, and reports per-replica distribution + wall time.
+Default mode builds a small heterogeneous "fleet" of replicas of a
+smoke-config model (speed factors emulate mixed pods).  ``--sharded`` carves
+the local device pool into mesh slices instead (``--mesh-shapes 1x1,2x1,2x2``
+with enough devices, e.g. under ``XLA_FLAGS=--xla_force_host_platform_
+device_count=8``): each replica is a real ``repro.dist`` substrate and the
+HEFT_RT front end maps requests across the heterogeneous slices.
 """
 
 from __future__ import annotations
@@ -17,7 +21,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models.model import init_params
-from repro.serve import HeftFrontEnd, ReplicaHandle, ServeEngine
+from repro.serve import HeftFrontEnd, ReplicaHandle, ServeEngine, mesh_backed_fleet
 
 
 def main() -> None:
@@ -26,17 +30,29 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--replicas", type=int, default=3)
+    ap.add_argument("--sharded", action="store_true",
+                    help="back replicas with mesh slices of the device pool")
+    ap.add_argument("--mesh-shapes", default="1x1",
+                    help="comma-separated slice shapes for --sharded, "
+                         "e.g. 1x1,2x1,2x2")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     params = init_params(jax.random.key(0), cfg)
     print(f"[serve] arch={cfg.name} params={cfg.param_count()/1e6:.2f}M "
-          f"replicas={args.replicas}")
+          f"devices={jax.device_count()}")
 
-    speeds = [1.0, 0.7, 1.4][: args.replicas] or [1.0]
-    fleet = [ReplicaHandle(f"replica{i}(x{s})",
-                           ServeEngine(cfg, params, max_len=128), speed=s)
-             for i, s in enumerate(speeds)]
+    if args.sharded:
+        shapes = [tuple(int(d) for d in s.split("x"))
+                  for s in args.mesh_shapes.split(",")]
+        fleet = mesh_backed_fleet(cfg, params, shapes, max_len=128)
+        print(f"[serve] mesh-backed fleet: "
+              f"{[r.mesh_shape for r in fleet]} slices")
+    else:
+        speeds = [1.0, 0.7, 1.4][: args.replicas] or [1.0]
+        fleet = [ReplicaHandle(f"replica{i}(x{s})",
+                               ServeEngine(cfg, params, max_len=128), speed=s)
+                 for i, s in enumerate(speeds)]
     front = HeftFrontEnd(fleet)
 
     rng = np.random.default_rng(0)

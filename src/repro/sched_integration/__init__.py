@@ -8,6 +8,12 @@ from repro.sched_integration.expert_placement import (
     plan_expert_placement,
     round_robin_assignment,
 )
+from repro.sched_integration.cost_model import (
+    CostCell,
+    CostModelRegistry,
+    registry_from_dryrun_artifacts,
+    scaled_cell,
+)
 from repro.sched_integration.fabric import (
     MappingFabric,
     eft_dispatch_numpy,
@@ -22,14 +28,17 @@ from repro.sched_integration.serve_scheduler import (
     ServeResult,
     default_fleet,
     make_requests,
+    mesh_fleet,
     simulate_serving,
 )
 
 __all__ = [
     "apply_placement", "makespan", "placement_permutation",
     "plan_expert_placement", "round_robin_assignment",
+    "CostCell", "CostModelRegistry", "registry_from_dryrun_artifacts",
+    "scaled_cell",
     "MappingFabric", "eft_dispatch_numpy", "heft_rt_fast",
     "make_policy_fabric", "service_time_matrix",
     "POLICIES", "Replica", "Request", "ServeResult", "default_fleet",
-    "make_requests", "simulate_serving",
+    "make_requests", "mesh_fleet", "simulate_serving",
 ]

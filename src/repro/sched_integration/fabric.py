@@ -38,6 +38,7 @@ always ahead of padding slots.
 from __future__ import annotations
 
 import math
+import os
 
 import numpy as np
 
@@ -50,6 +51,25 @@ from repro.kernels import heft_rt_hw
 _INF = float("inf")
 
 BACKENDS = ("numpy", "jit", "pallas")
+
+
+def _env_backend() -> str | None:
+    """Validated ``REPRO_FABRIC_BACKEND`` value, or None when unset."""
+    env = os.environ.get("REPRO_FABRIC_BACKEND", "").strip().lower()
+    if env and env not in BACKENDS:
+        raise ValueError(
+            f"REPRO_FABRIC_BACKEND must be one of {BACKENDS}, got {env!r}")
+    return env or None
+
+
+def default_backend() -> str:
+    """Resolve ``backend="auto"``: the ``REPRO_FABRIC_BACKEND`` env knob
+    wins (the CI backend matrix pins ``pallas`` with interpret fallback);
+    otherwise numpy on CPU hosts, jit when an accelerator is attached."""
+    env = _env_backend()
+    if env:
+        return env
+    return "numpy" if jax.default_backend() == "cpu" else "jit"
 
 
 # ---------------------------------------------------------------------------
@@ -190,7 +210,7 @@ class MappingFabric:
                  min_bucket: int = 8, max_bucket: int = 1 << 16,
                  interpret: bool | None = None, avail=None):
         if backend == "auto":
-            backend = "numpy" if jax.default_backend() == "cpu" else "jit"
+            backend = default_backend()
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         self.num_pes = int(num_pes)
@@ -412,12 +432,16 @@ class MappingFabric:
         return out
 
 
-def make_policy_fabric(backend: str = "numpy"):
+def make_policy_fabric(backend: str | None = None):
     """Serving-policy factory backed by a :class:`MappingFabric`.
 
     The returned policy matches ``policy_heft_rt`` decision-for-decision;
     the fabric is created lazily so one factory works for any fleet size.
+    ``backend=None`` honours ``REPRO_FABRIC_BACKEND`` (the CI backend
+    matrix) and defaults to the oracle-exact numpy host path otherwise.
     """
+    if backend is None:
+        backend = _env_backend() or "numpy"
     fab: MappingFabric | None = None
 
     def policy(exec_times, avail):

@@ -32,9 +32,23 @@ _INF = float("inf")
 
 @dataclass(frozen=True)
 class Replica:
+    """One PE of the serving fleet.
+
+    ``compute_tflops`` / ``hbm_gbps`` are the replica's *aggregate* effective
+    rates (per-chip rate × mesh size × MFU).  The optional mesh backing
+    (``arch`` + ``mesh_shape``, a slice of one device pool — see
+    ``repro.launch.mesh.slice_device_pool``) keys the replica into the
+    dry-run cost-model registry so its Exec_TID column comes from measured
+    FLOPs/bytes instead of the analytic roofline; ``ici_gbps`` > 0
+    additionally charges the cell's collective wire bytes.
+    """
+
     name: str
     compute_tflops: float      # effective bf16 throughput (MFU-adjusted)
     hbm_gbps: float            # effective memory bandwidth
+    arch: str | None = None              # cost-model key: architecture name
+    mesh_shape: tuple[int, ...] | None = None   # cost-model key: mesh slice
+    ici_gbps: float = 0.0                # interconnect rate for wire bytes
 
 
 @dataclass(frozen=True)
@@ -133,7 +147,8 @@ class ServeResult:
 def simulate_serving(replicas: list[Replica], requests: list[Request],
                      policy, *, active_params: float,
                      sched_tick_s: float = 0.005,
-                     exec_matrix: np.ndarray | None = None) -> ServeResult:
+                     exec_matrix: np.ndarray | None = None,
+                     cost_registry=None) -> ServeResult:
     """Tick-based continuous dispatch, event-horizon-driven: at every tick
     with arrived work, the ready queue is mapped by ``policy`` onto replica
     queues and committed in one vectorized pass; ticks with no ready work
@@ -142,15 +157,22 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
     ``exec_matrix`` overrides the roofline estimates with an explicit (N, P)
     matrix aligned with ``requests`` (rows of ``+inf`` mark requests no
     replica can serve; those are reported unserved rather than committed).
+    ``cost_registry`` (a
+    :class:`~repro.sched_integration.cost_model.CostModelRegistry`) derives
+    the Exec_TID matrix from dry-run cost cells for mesh-backed replicas,
+    with the roofline as fallback for uncovered (arch × mesh) cells.
     """
     P = len(replicas)
     N = len(requests)
     arrivals = np.array([r.arrival for r in requests])
-    if exec_matrix is None:
+    if exec_matrix is not None:
+        ex_all = np.asarray(exec_matrix, dtype=np.float64)
+    elif cost_registry is not None:
+        ex_all = cost_registry.exec_tid_matrix(requests, replicas,
+                                               active_params=active_params)
+    else:
         ex_all = service_time_matrix(requests, replicas,
                                      active_params=active_params)
-    else:
-        ex_all = np.asarray(exec_matrix, dtype=np.float64)
     by_arrival = np.argsort(arrivals, kind="stable")
     arr_sorted = arrivals[by_arrival]
 
@@ -255,3 +277,26 @@ def default_fleet() -> list[Replica]:
         Replica("v4-128", 128 * 275e0 * 0.4, 128 * 1200 * 0.5),
         Replica("v5e-64", 64 * 197e0 * 0.5, 64 * 819 * 0.6),
     ]
+
+
+def mesh_fleet(arch: str = "deepseek-7b",
+               mesh_shapes=((16, 16), (16, 16), (4, 16), (4, 4)),
+               *, chip_tflops: float = 197.0, chip_hbm_gbps: float = 819.0,
+               ici_gbps: float = 0.0,
+               mfu: float = 0.5, hbm_eff: float = 0.6) -> list[Replica]:
+    """A heterogeneous *mesh-backed* fleet: same-generation chips carved into
+    mixed mesh slices (the serving analogue of the paper's non-uniform PEs).
+    Aggregate rates scale with slice size; ``arch`` + each slice shape key
+    the replicas into the cost-model registry.
+    """
+    import math
+
+    fleet = []
+    for i, shape in enumerate(mesh_shapes):
+        shape = tuple(int(d) for d in shape)
+        n = math.prod(shape)
+        fleet.append(Replica(
+            f"{arch}@{'x'.join(map(str, shape))}#{i}",
+            n * chip_tflops * mfu, n * chip_hbm_gbps * hbm_eff,
+            arch=arch, mesh_shape=shape, ici_gbps=ici_gbps))
+    return fleet

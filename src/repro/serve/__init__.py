@@ -1,3 +1,8 @@
-from repro.serve.engine import HeftFrontEnd, ReplicaHandle, ServeEngine
+from repro.serve.engine import (
+    HeftFrontEnd,
+    ReplicaHandle,
+    ServeEngine,
+    mesh_backed_fleet,
+)
 
-__all__ = ["HeftFrontEnd", "ReplicaHandle", "ServeEngine"]
+__all__ = ["HeftFrontEnd", "ReplicaHandle", "ServeEngine", "mesh_backed_fleet"]

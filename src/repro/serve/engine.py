@@ -3,68 +3,145 @@
 Two layers:
 
 * ``ServeEngine`` — a real decode loop (prefill + batched token-by-token
-  decode with KV/state caches) for a single replica.  Used by the examples
-  (CPU-scale models) and by launch/serve.py.
+  decode with KV/state caches) for a single replica.  Optionally *mesh-
+  backed*: give it a ``repro.dist`` mesh slice and its prefill/decode steps
+  jit under the ``replica_pspecs`` layouts (params FSDP+TP, KV heads over
+  ``model``, batch replicated) with the activation hint policy installed —
+  the replica becomes an actual multi-device substrate instead of an
+  abstract speed factor.
 * ``HeftFrontEnd`` — maps dynamically arriving requests onto a fleet of
   replicas with HEFT_RT (the paper's scheduler as the admission layer; see
   sched_integration/serve_scheduler.py for the fleet-scale simulation).
+  Heterogeneous fleets mix replica mesh shapes (1×1, 2×1, 2×2 slices of one
+  device pool — ``repro.launch.mesh.slice_device_pool``); per-replica
+  ``Exec_TID`` estimates come from the dry-run cost-model registry when the
+  replica's (arch × mesh) cells are covered, host-scale roofline otherwise.
 """
 
 from __future__ import annotations
 
+import contextlib
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import heft_rt_numpy
+from repro.dist.hints import sharding_policy
+from repro.dist.sharding import MeshAxes, named, replica_pspecs
 from repro.models.config import ModelConfig
 from repro.models.model import decode_step, prefill_step
 
 
+def _host_scale_s(prompt_tokens, new_tokens):
+    """The abstract-fleet service-time estimate (seconds, elementwise)."""
+    return 1e-4 * prompt_tokens + 2e-3 * new_tokens
+
+
 @dataclass
 class ServeEngine:
-    """Single-replica engine: batched prefill + greedy decode."""
+    """Single-replica engine: batched prefill + greedy decode.
+
+    ``mesh``/``axes`` back the replica with a mesh slice: params are
+    device_put to their FSDP+TP layout once, caches live sharded across the
+    slice (KV heads over ``model``), and every step traces under
+    ``jax.set_mesh`` + the replica's activation ``sharding_policy``.
+    """
 
     cfg: ModelConfig
     params: dict
     max_len: int = 256
+    mesh: object | None = None          # jax Mesh slice backing this replica
+    axes: MeshAxes | None = None
+    fsdp: bool = True
 
     def __post_init__(self):
-        self._decode = jax.jit(
-            lambda p, c, t, pos: decode_step(p, c, t, pos, self.cfg))
-        self._prefill = jax.jit(
-            lambda p, t: prefill_step(p, t, self.cfg, max_len=self.max_len))
+        donate = ()
+        if self.mesh is not None:
+            ax = self.axes or MeshAxes()
+            self.axes = ax
+            specs = replica_pspecs(self.cfg, ax, fsdp=self.fsdp)
+            p_sh = named(self.mesh, specs["params"])
+            c_sh = named(self.mesh, specs["cache"])
+            b_sh = named(self.mesh, specs["batch"])
+            self._policy = dict(specs["policy"], __mesh__=self.mesh)
+            with self._ctx():
+                self.params = jax.device_put(self.params, p_sh)
+            self._decode = jax.jit(
+                lambda p, c, t, pos: decode_step(p, c, t, pos, self.cfg),
+                in_shardings=(p_sh, c_sh, b_sh, None),
+                out_shardings=(None, c_sh), donate_argnums=(1,))
+            self._prefill = jax.jit(
+                lambda p, t: prefill_step(p, t, self.cfg, max_len=self.max_len),
+                in_shardings=(p_sh, b_sh), out_shardings=(None, c_sh))
+        else:
+            self._policy = None
+            self._decode = jax.jit(
+                lambda p, c, t, pos: decode_step(p, c, t, pos, self.cfg))
+            self._prefill = jax.jit(
+                lambda p, t: prefill_step(p, t, self.cfg, max_len=self.max_len))
+
+    @property
+    def mesh_shape(self) -> tuple[int, ...] | None:
+        return tuple(self.mesh.devices.shape) if self.mesh is not None else None
+
+    def _ctx(self):
+        """Mesh + hint-policy context for traces/transfers (identity unmeshed)."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        ctx = contextlib.ExitStack()
+        ctx.enter_context(jax.set_mesh(self.mesh))
+        ctx.enter_context(sharding_policy(self._policy))
+        return ctx
 
     def generate(self, prompts: np.ndarray, new_tokens: int,
                  greedy: bool = True, seed: int = 0):
         """prompts: (B, S0) int32 → (B, S0+new_tokens) generated ids."""
         B, S0 = prompts.shape
-        logits, caches = self._prefill(self.params, jnp.asarray(prompts))
-        out = [jnp.asarray(prompts)]
-        key = jax.random.key(seed)
-        tok = None
-        for i in range(new_tokens):
-            if greedy:
-                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            else:
-                key, sub = jax.random.split(key)
-                tok = jax.random.categorical(sub, logits).astype(jnp.int32)
-            out.append(tok[:, None])
-            logits, caches = self._decode(self.params, caches, tok[:, None],
-                                          jnp.int32(S0 + i))
-        return np.asarray(jnp.concatenate(out, axis=1))
+        with self._ctx():
+            logits, caches = self._prefill(self.params, jnp.asarray(prompts))
+            out = [jnp.asarray(prompts)]
+            key = jax.random.key(seed)
+            tok = None
+            for i in range(new_tokens):
+                if greedy:
+                    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                else:
+                    key, sub = jax.random.split(key)
+                    tok = jax.random.categorical(sub, logits).astype(jnp.int32)
+                out.append(tok[:, None])
+                logits, caches = self._decode(self.params, caches, tok[:, None],
+                                              jnp.int32(S0 + i))
+            return np.asarray(jnp.concatenate(out, axis=1))
 
 
 @dataclass
 class ReplicaHandle:
+    """One fleet slot: an engine plus its scheduling identity.
+
+    ``speed`` scales the host-scale fallback estimate (legacy abstract
+    fleets).  Mesh-backed replicas instead carry the cost-model key
+    (``arch`` + ``mesh_shape``, auto-filled from the engine's mesh) and
+    aggregate hardware rates, so the front-end's Exec_TID column can come
+    from dry-run cost cells.
+    """
+
     name: str
     engine: ServeEngine
     speed: float = 1.0             # relative throughput (heterogeneous fleet)
     avail_at: float = 0.0          # availability-time register (T_avail)
     processed: int = 0
+    arch: str | None = None              # cost-model key
+    mesh_shape: tuple[int, ...] | None = None
+    compute_tflops: float | None = None  # aggregate effective rates
+    hbm_gbps: float | None = None
+    ici_gbps: float = 0.0
+
+    def __post_init__(self):
+        if self.mesh_shape is None:
+            self.mesh_shape = self.engine.mesh_shape
 
 
 @dataclass
@@ -80,21 +157,40 @@ class HeftFrontEnd:
     :class:`~repro.sched_integration.fabric.MappingFabric` routes events
     through the bucketed jit/Pallas dispatch pipeline (identical decisions,
     device-resident T_avail registers).
+
+    ``cost_registry`` (a
+    :class:`~repro.sched_integration.cost_model.CostModelRegistry`) supplies
+    dry-run-derived Exec_TID columns for replicas whose (arch × mesh) cells
+    it covers; uncovered replicas keep the host-scale estimate.
     """
 
     replicas: list[ReplicaHandle]
     fabric: object | None = None      # MappingFabric, optional
+    cost_registry: object | None = None
 
     def estimate_s(self, prompt_len: int, new_tokens: int,
                    replica: ReplicaHandle) -> float:
-        base = 1e-4 * prompt_len + 2e-3 * new_tokens   # host-scale estimate
-        return base / replica.speed
+        return _host_scale_s(prompt_len, new_tokens) / replica.speed
+
+    def exec_estimates(self, requests: list[tuple[np.ndarray, int]]
+                       ) -> np.ndarray:
+        """(n, P) Exec_TID matrix: cost-model columns where the registry
+        covers a replica, host-scale roofline fallback elsewhere."""
+        pf = np.array([len(pr) for pr, _ in requests], dtype=np.float64)
+        dc = np.array([nt for _, nt in requests], dtype=np.float64)
+        cols = []
+        for r in self.replicas:
+            col = (self.cost_registry.column_s(r, pf, dc)
+                   if self.cost_registry is not None else None)
+            if col is None:
+                col = _host_scale_s(pf, dc) / r.speed
+            cols.append(col)
+        return np.stack(cols, axis=1)
 
     def schedule(self, requests: list[tuple[np.ndarray, int]]):
         """requests: [(prompt, new_tokens)] → list of (req_idx, replica_idx)."""
         n, p = len(requests), len(self.replicas)
-        ex = np.array([[self.estimate_s(len(pr), nt, r)
-                        for r in self.replicas] for pr, nt in requests])
+        ex = self.exec_estimates(requests)
         avg = ex.mean(axis=1)
         avail = np.array([r.avail_at for r in self.replicas])
         if self.fabric is not None:
@@ -119,3 +215,34 @@ class HeftFrontEnd:
             rep.processed += 1
         return [outputs[i] for i in range(len(requests))], \
             {r.name: r.processed for r in self.replicas}
+
+
+def mesh_backed_fleet(cfg: ModelConfig, params: dict, mesh_shapes,
+                      *, max_len: int = 128, arch: str | None = None,
+                      axes: MeshAxes | None = None, devices=None,
+                      chip_tflops: float = 1.0, chip_hbm_gbps: float = 1.0,
+                      ici_gbps: float = 0.0) -> list[ReplicaHandle]:
+    """Carve the device pool into mesh slices and build one engine each.
+
+    The heterogeneous serve fleet in one call: ``mesh_shapes`` like
+    ``[(1, 1), (2, 1), (2, 2)]`` produce replicas of mixed parallelism whose
+    aggregate rates (and HEFT_RT speed fallback) scale with slice size.
+    """
+    import math
+
+    from repro.launch.mesh import slice_device_pool
+
+    ax = axes or MeshAxes()
+    meshes = slice_device_pool(mesh_shapes, (ax.data, ax.model),
+                               devices=devices)
+    fleet = []
+    for i, mesh in enumerate(meshes):
+        shape = tuple(mesh.devices.shape)
+        n = math.prod(shape)
+        eng = ServeEngine(cfg, params, max_len=max_len, mesh=mesh, axes=ax)
+        fleet.append(ReplicaHandle(
+            f"{cfg.name}@{'x'.join(map(str, shape))}#{i}", eng,
+            speed=float(n), arch=arch or cfg.name,
+            compute_tflops=n * chip_tflops, hbm_gbps=n * chip_hbm_gbps,
+            ici_gbps=ici_gbps))
+    return fleet

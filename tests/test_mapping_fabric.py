@@ -238,12 +238,30 @@ def test_service_time_matrix_bitwise_equals_scalar_loop():
     seed=st.integers(0, 2**31 - 1),
 )
 def test_fabric_policy_matches_oracle_policy(n, seed):
+    """Default-backend policy (REPRO_FABRIC_BACKEND in the CI matrix) on the
+    f32-exact 1/8-integer grid, so device backends owe bitwise agreement."""
+    rng = np.random.default_rng(seed)
+    p = 4
+    ex = rng.integers(1, 16, (n, p)).astype(np.float64) / 8.0
+    ex[rng.random(n) < 0.1] = np.inf
+    avail = rng.integers(0, 8, p).astype(np.float64) / 8.0
+    pol = make_policy_fabric()
+    np.testing.assert_array_equal(pol(ex, avail), policy_heft_rt(ex, avail))
+
+
+@given(
+    n=st.integers(1, 30),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fabric_policy_matches_oracle_policy_float64(n, seed):
+    """Continuous draws exercise the numpy host path's exact float64 chain
+    (no f32 grid restriction — pinned backend)."""
     rng = np.random.default_rng(seed)
     p = 4
     ex = rng.uniform(0.05, 2.0, (n, p))
     ex[rng.random(n) < 0.1] = np.inf
     avail = rng.uniform(0, 1, p)
-    pol = make_policy_fabric()
+    pol = make_policy_fabric("numpy")
     np.testing.assert_array_equal(pol(ex, avail), policy_heft_rt(ex, avail))
 
 
