@@ -13,6 +13,7 @@ unit per row).
   bench_serve_scheduler          beyond-paper: LLM serving fleet
   bench_serve_sharded            beyond-paper: mesh-backed fleet + cost model
   bench_mapping_fabric           beyond-paper: fabric-batched mapping events
+  bench_train_compress           beyond-paper: int8 pod-compressed train step
   bench_expert_placement         beyond-paper: MoE expert rebalancing
   bench_energy                   paper future-work: energy-aware HEFT_RT
   bench_roofline                 deliverable (g): per-cell roofline terms
@@ -58,6 +59,7 @@ MODULES = [
     "bench_serve_scheduler",
     "bench_serve_sharded",
     "bench_mapping_fabric",
+    "bench_train_compress",
     "bench_expert_placement",
     "bench_energy",
     "bench_roofline",
@@ -70,9 +72,17 @@ DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "artifacts")
 # listed here — ratio/derived rows ("x", "pct"), counts, free-form — are
 # informational and exempt from the gate.
 CHECK_DIRECTION = {
-    "ns": -1, "us": -1, "ms": -1, "s": -1,
+    "ns": -1, "us": -1, "ms": -1, "s": -1, "B": -1,
     "events/s": 1, "rps": 1, "tok/s": 1, "frames/s": 1, "GB/s": 1,
 }
+
+# Units whose rows are bit-deterministic (analytic models, not wall clock):
+# they gate on ANY change, in either direction and regardless of
+# --tolerance — a silent 4x wire-byte rise cannot hide inside a wall-clock
+# module's loose gate, and a silent drop cannot quietly rewrite the
+# baseline either (re-seed the artifact consciously when the model
+# legitimately changes).
+CHECK_EXACT_UNITS = {"B"}
 
 
 def _git_rev() -> str:
@@ -126,8 +136,10 @@ def check_rows(rows, baseline: dict, tolerance: float) -> list[str]:
     Matching is on (name, unit); the unit picks the regression direction
     (see CHECK_DIRECTION).  Derived ratio rows (unlisted units such as
     ``x``/``pct``), ``_``-prefixed bookkeeping rows, non-numeric values, and
-    rows absent from the baseline are exempt.  Returns human-readable
-    regression descriptions (empty → gate passes).
+    rows absent from the baseline are exempt.  CHECK_EXACT_UNITS rows are
+    deterministic and fail on ANY change, in either direction, regardless
+    of ``tolerance``.  Returns human-readable regression descriptions
+    (empty → gate passes).
     """
     base = {(r["name"], r["unit"]): r["value"] for r in baseline.get("rows", [])
             if isinstance(r.get("value"), (int, float))}
@@ -144,15 +156,18 @@ def check_rows(rows, baseline: dict, tolerance: float) -> list[str]:
         # Multiplicative in both directions so tolerance >= 1 stays
         # meaningful (an additive 1-tolerance drop-floor would go negative
         # and silently disable the throughput gate).
-        if direction < 0:   # time-like: a rise beyond tolerance regresses
+        if unit in CHECK_EXACT_UNITS:   # deterministic: any change fails
+            bad = abs(value - old) > 1e-9 * max(1.0, abs(old))
+        elif direction < 0:  # time-like: a rise beyond tolerance regresses
             bad = value > old * (1.0 + tolerance) and value - old > 1e-12
-        else:               # throughput-like: a drop beyond tolerance
+        else:                # throughput-like: a drop beyond tolerance
             bad = value < old / (1.0 + tolerance)
         if bad:
             pct = (value / old - 1.0) * 100 if old else float("inf")
+            shown = 0.0 if unit in CHECK_EXACT_UNITS else tolerance
             problems.append(
                 f"{name} [{unit}]: {old:.4g} -> {value:.4g} ({pct:+.1f}%, "
-                f"tolerance ±{tolerance * 100:.0f}%)")
+                f"tolerance ±{shown * 100:.0f}%)")
     return problems
 
 

@@ -1,0 +1,56 @@
+"""Pod-compressed training with fault tolerance: int8 cross-pod gradients,
+crash at step 30, resume bit-exactly — residual included.
+
+The Trainer builds a (2, 2) ``(pod, data)`` mesh itself (4 fake CPU devices
+here), reduces gradients cross-pod with the int8 error-feedback collective,
+and checkpoints the per-pod residual next to params/opt; the restarted run
+continues on the exact trajectory of an uninterrupted one.
+
+  PYTHONPATH=src python examples/train_pod_compressed.py
+"""
+
+import os
+import shutil
+
+# must happen before jax initializes its backend
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax  # noqa: E402
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.data import DataConfig  # noqa: E402
+from repro.optim import AdamWConfig, warmup_cosine  # noqa: E402
+from repro.train import Trainer, TrainerConfig  # noqa: E402
+
+CKPT = "/tmp/repro_example_pod_ckpt"
+shutil.rmtree(CKPT, ignore_errors=True)
+
+cfg = get_smoke_config("deepseek-7b")
+print(f"training {cfg.name}: {cfg.param_count()/1e6:.2f}M params "
+      f"on {len(jax.devices())} devices, int8 pod-compressed gradients")
+
+
+def make_trainer():
+    return Trainer(
+        cfg,
+        AdamWConfig(learning_rate=warmup_cosine(3e-3, 10, 60), weight_decay=0.1),
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8),
+        TrainerConfig(total_steps=60, checkpoint_every=20,
+                      checkpoint_dir=CKPT, log_every=20,
+                      mesh_shape=(2, 2), compress_pods=True, microbatches=2),
+    )
+
+
+try:
+    make_trainer().run(inject_failure_at=30)
+except RuntimeError as e:
+    print(f"!! {e} — restarting from latest checkpoint (residual restored)")
+
+tr = make_trainer()
+_, _, history = tr.run()   # resumes from step 20 exactly
+for step, loss in history:
+    print(f"  step {step:4d}  loss {loss:.4f}")
+res_leaves = jax.tree.leaves(tr.last_residual)
+print(f"error-feedback residual: {len(res_leaves)} leaves, "
+      f"per-pod stacked {res_leaves[0].shape} — checkpointed with params")
+print("restart was bitwise-exact (see tests/test_train_compress.py)")

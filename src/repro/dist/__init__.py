@@ -15,7 +15,10 @@ substrate.  Three layers:
   they are exact identities, so unit tests and smoke runs are unaffected.
 * :mod:`repro.dist.compression` — **pod-level collectives**: ``psum_mean``
   and the int8 + error-feedback ``compressed_psum_mean`` used for cross-pod
-  gradient reduction over the slow inter-pod links.
+  gradient reduction over the slow inter-pod links, plus the residual
+  lifecycle helpers ``init_residual`` / ``reshard_residual`` (the residual is
+  first-class train-step state, stacked per pod and checkpointed — see the
+  contract in that module's docstring).
 
 Axis conventions (used by every PartitionSpec this package emits)
 -----------------------------------------------------------------
@@ -78,10 +81,32 @@ def _install_jax_compat() -> None:
 
         jax.set_mesh = set_mesh
 
+    # optimization_barrier has no vmap batching rule on the pinned jax —
+    # the barrier is elementwise-identity, so batching is a pass-through
+    # (needed by the trainer's vmap-over-pods gradient computation, which
+    # maps the model's scan-over-layers residual barriers).
+    try:
+        from jax._src.lax.lax import optimization_barrier_p
+        from jax.interpreters import batching
+
+        if optimization_barrier_p not in batching.primitive_batchers:
+            def _opt_barrier_batcher(args, dims):
+                return optimization_barrier_p.bind(*args), dims
+
+            batching.primitive_batchers[optimization_barrier_p] = \
+                _opt_barrier_batcher
+    except ImportError:  # newer jax: private path moved AND rule exists
+        pass
+
 
 _install_jax_compat()
 
-from repro.dist.compression import compressed_psum_mean, psum_mean  # noqa: E402
+from repro.dist.compression import (  # noqa: E402
+    compressed_psum_mean,
+    init_residual,
+    psum_mean,
+    reshard_residual,
+)
 from repro.dist.hints import current_policy, shard_hint, sharding_policy  # noqa: E402
 from repro.dist.sharding import (  # noqa: E402
     MeshAxes,
@@ -96,7 +121,7 @@ from repro.dist.sharding import (  # noqa: E402
 
 __all__ = [
     "MeshAxes", "activation_hint_policy", "batch_pspec", "cache_pspecs",
-    "compressed_psum_mean", "current_policy", "named", "opt_pspecs",
-    "param_pspecs", "psum_mean", "replica_pspecs", "shard_hint",
-    "sharding_policy",
+    "compressed_psum_mean", "current_policy", "init_residual", "named",
+    "opt_pspecs", "param_pspecs", "psum_mean", "replica_pspecs",
+    "reshard_residual", "shard_hint", "sharding_policy",
 ]

@@ -18,6 +18,27 @@ Both functions are written against a *named axis* and therefore run inside
 ``shard_map``/``pmap`` manual regions only; the trainer wraps its per-pod
 gradient computation in a shard_map manual over the pod axis with everything
 else left to GSPMD (see train/trainer.py).
+
+Residual sharding / checkpoint contract
+---------------------------------------
+The error-feedback residual is **per-pod local state** — each pod's leftover
+quantization error from *its own* gradient.  It is never reduced over the pod
+axis.  Outside the manual region the canonical global representation is the
+*stacked* form built by :func:`init_residual`: every leaf has a leading pod
+dim, shape ``(num_pods, *grad_leaf.shape)``, dtype float32, and is sharded
+``P(pod_axis)`` (each pod holds exactly its own ``[1, ...]`` slice).  The
+trainer threads this tree through the train step as first-class state
+(``step(params, opt_state, residual, batch)``) and checkpoints it next to
+params/opt — dropping it on restart would re-bias the very first compressed
+step after every crash.
+
+On an **elastic pod-count change** (restore onto a mesh with a different pod
+axis size) :func:`reshard_residual` rebuilds the stack so the quantity the
+optimizer actually sees — the mean correction ``Σ_p e_p / n`` folded into the
+next all-reduce — is preserved exactly: every new pod starts from the mean of
+the old pods' residuals (``Σ' e'/n' = Σ e/n``).  Same-pod-count restores are
+bit-exact (the leaves round-trip losslessly through ``Checkpointer`` and
+``restore(shardings=...)`` only re-places them on the new mesh).
 """
 
 from __future__ import annotations
@@ -25,6 +46,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+# Logical cross-pod wire format of ``compressed_psum_mean``: one int8 per
+# element plus one shared f32 absmax per leaf (the ``pmax``).  The CPU
+# emulation materializes the int32 accumulator, but a real deployment sums
+# int8 payloads with int32 accumulation on the wire.  Benchmarks derive
+# their wire-byte rows from these constants so a format change (e.g.
+# widening to int16) moves the tracked numbers.
+WIRE_BYTES_PER_ELEM = 1
+WIRE_SCALE_BYTES_PER_LEAF = 4
+EXACT_BYTES_PER_ELEM = 4          # f32 all-reduce payload
 
 
 def psum_mean(tree, axis_name: str):
@@ -39,7 +70,11 @@ def compressed_psum_mean(tree, axis_name: str, err=None):
     Returns ``(mean_tree, new_err_tree)``; the caller carries ``new_err``
     into the next invocation.  Worst-case per-element error of the mean is
     half an int8 step of the *pod-wide* absmax — < 2% relative for gradient-
-    shaped tensors, and unbiased over steps thanks to the residual.
+    shaped tensors, and unbiased over steps thanks to the residual.  The
+    carry telescopes: over K steps the *cumulative* mean deviates from the
+    exact cumulative mean by at most the final residual / pod count, while
+    dropping the residual lets per-step bias accumulate linearly (see
+    tests/test_train_compress.py for the property test).
     """
     flat, tdef = jax.tree.flatten(tree)
     if err is None:
@@ -65,3 +100,32 @@ def compressed_psum_mean(tree, axis_name: str, err=None):
     pairs = [one(g, e) for g, e in zip(flat, flat_err)]
     return (tdef.unflatten([p[0] for p in pairs]),
             tdef.unflatten([p[1] for p in pairs]))
+
+
+def init_residual(grad_tree, num_pods: int):
+    """Zero residual in the stacked global form (see module docstring).
+
+    ``grad_tree`` supplies structure and per-leaf shapes (params and grads
+    share both); leaves come back ``(num_pods, *leaf.shape)`` float32.
+    """
+    return jax.tree.map(
+        lambda g: jnp.zeros((num_pods,) + tuple(g.shape), jnp.float32),
+        grad_tree)
+
+
+def reshard_residual(residual, num_pods: int):
+    """Adapt a stacked residual to a new pod-axis size.
+
+    Same count → returned untouched (bit-exact restarts).  Different count →
+    every new pod starts from the mean of the old pods' residuals, which
+    preserves the applied correction ``Σ_p e_p / n`` exactly (the only
+    pod-aggregate the compressed all-reduce folds into the trajectory).
+    """
+    def one(e):
+        e = jnp.asarray(e)
+        if e.shape[0] == num_pods:
+            return e
+        mean = jnp.mean(e.astype(jnp.float32), axis=0, keepdims=True)
+        return jnp.broadcast_to(mean, (num_pods,) + e.shape[1:])
+
+    return jax.tree.map(one, residual)

@@ -33,10 +33,22 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--inject-failure-at", type=int, default=None,
                     help="raise after N steps to demo checkpoint/restart")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient accumulation factor")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="comma-separated mesh over (pod,data,model) axes, "
+                         "e.g. '2,2' — leading axis is the pod axis")
+    ap.add_argument("--compress-pods", action="store_true",
+                    help="int8 error-feedback cross-pod gradient reduction "
+                         "(residual is checkpointed train-step state)")
     args = ap.parse_args()
 
+    mesh_shape = (tuple(int(x) for x in args.mesh_shape.split(","))
+                  if args.mesh_shape else None)
     cfg = get_smoke_config(args.arch)
-    print(f"[train] arch={cfg.name} params={cfg.param_count()/1e6:.2f}M")
+    print(f"[train] arch={cfg.name} params={cfg.param_count()/1e6:.2f}M "
+          f"mesh={mesh_shape} compress={args.compress_pods} "
+          f"microbatches={args.microbatches}")
     trainer = Trainer(
         cfg,
         AdamWConfig(learning_rate=warmup_cosine(args.lr, 10, args.steps),
@@ -44,7 +56,9 @@ def main() -> None:
         DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                    global_batch=args.batch),
         TrainerConfig(total_steps=args.steps, checkpoint_every=args.ckpt_every,
-                      checkpoint_dir=args.ckpt_dir, log_every=10),
+                      checkpoint_dir=args.ckpt_dir, log_every=10,
+                      microbatches=args.microbatches, mesh_shape=mesh_shape,
+                      compress_pods=args.compress_pods),
     )
     t0 = time.time()
     _, _, history = trainer.run(inject_failure_at=args.inject_failure_at)

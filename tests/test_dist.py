@@ -5,14 +5,10 @@ Multi-device cases run in subprocesses with a fake 8-device CPU platform
 and EXECUTE real sharded steps — numerics must match the single-device run.
 """
 
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
 import numpy as np
 import pytest
+
+from _subproc import run_sub as _run_sub
 
 from repro.configs import all_arch_names, get_config
 from repro.dist.sharding import (
@@ -24,19 +20,6 @@ from repro.dist.sharding import (
 )
 from repro.models.config import SHAPES
 from repro.models.model import param_specs
-
-
-REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def _run_sub(code: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = REPO_SRC
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env, timeout=900)
-    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
-    return out.stdout
 
 
 # ---------------------------------------------------------------------------

@@ -19,15 +19,12 @@ Covers the tentpole claims:
 """
 
 import json
-import os
-import subprocess
-import sys
-import textwrap
 
 import numpy as np
 import pytest
 
 from _hypothesis_compat import given, settings, st
+from _subproc import run_sub as _run_sub
 
 from repro.core import heft_rt_numpy
 from repro.launch.hlo_analysis import collective_stats
@@ -45,18 +42,6 @@ from repro.sched_integration.serve_scheduler import policy_heft_rt
 
 settings.register_profile("ci", max_examples=20, deadline=None)
 settings.load_profile("ci")
-
-REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def _run_sub(code: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = REPO_SRC
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env, timeout=900)
-    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
-    return out.stdout
 
 
 # ---------------------------------------------------------------------------
