@@ -14,6 +14,7 @@ unit per row).
   bench_serve_sharded            beyond-paper: mesh-backed fleet + cost model
   bench_mapping_fabric           beyond-paper: fabric-batched mapping events
   bench_train_compress           beyond-paper: int8 pod-compressed train step
+  bench_elastic_fleet            beyond-paper: elastic fleet resize events
   bench_expert_placement         beyond-paper: MoE expert rebalancing
   bench_energy                   paper future-work: energy-aware HEFT_RT
   bench_roofline                 deliverable (g): per-cell roofline terms
@@ -60,6 +61,7 @@ MODULES = [
     "bench_serve_sharded",
     "bench_mapping_fabric",
     "bench_train_compress",
+    "bench_elastic_fleet",
     "bench_expert_placement",
     "bench_energy",
     "bench_roofline",

@@ -22,7 +22,6 @@ import shutil
 import threading
 import time
 
-import jax
 import numpy as np
 
 
@@ -127,7 +126,9 @@ class Checkpointer:
 
     def restore(self, template, step: int | None = None, *, shardings=None):
         """Rebuild ``template``-shaped pytree.  ``shardings``: optional pytree
-        (matching template) of jax.sharding.Sharding for elastic placement."""
+        (matching template) of jax.sharding.Sharding for elastic placement —
+        applied through ``dist.sharding.reshard_tree``, the same in-memory
+        migration primitive live replicas use."""
         self.wait()
         if step is None:
             step = self.latest_step()
@@ -138,11 +139,8 @@ class Checkpointer:
             flat = {k: z[k] for k in z.files}
         tree = _unflatten_into(template, flat)
         if shardings is not None:
-            flat_t, tdef = jax.tree.flatten(tree)
-            flat_s = tdef.flatten_up_to(shardings)
-            tree = tdef.unflatten([
-                jax.device_put(t, s) if s is not None else t
-                for t, s in zip(flat_t, flat_s)])
+            from repro.dist.sharding import reshard_tree  # lazy: keep import light
+            tree = reshard_tree(tree, shardings)
         return tree
 
     def read_metadata(self, step: int | None = None) -> dict:

@@ -117,11 +117,12 @@ from repro.dist.sharding import (  # noqa: E402
     opt_pspecs,
     param_pspecs,
     replica_pspecs,
+    reshard_tree,
 )
 
 __all__ = [
     "MeshAxes", "activation_hint_policy", "batch_pspec", "cache_pspecs",
     "compressed_psum_mean", "current_policy", "init_residual", "named",
     "opt_pspecs", "param_pspecs", "psum_mean", "replica_pspecs",
-    "reshard_residual", "shard_hint", "sharding_policy",
+    "reshard_residual", "reshard_tree", "shard_hint", "sharding_policy",
 ]

@@ -29,6 +29,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 from jax.tree_util import tree_map_with_path
@@ -59,6 +61,42 @@ def named(mesh, tree):
     """Bind a PartitionSpec tree to ``mesh`` as NamedShardings."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def reshard_tree(tree, new_shardings, *, old_shardings=None):
+    """Migrate a pytree between shardings purely in memory.
+
+    The one resharding primitive every elastic path shares: the checkpoint
+    restore (``Checkpointer.restore(shardings=...)``), the trainer's
+    pod-count residual migration, and a live ``ServeEngine.reshard`` all
+    re-place leaves with this helper — none of them needs a disk round-trip.
+
+    ``new_shardings`` is a pytree matching ``tree`` (or a prefix of it) whose
+    leaves are ``jax.sharding.Sharding``s; ``None`` leaves are left untouched.
+    ``old_shardings``, when given, marks leaves whose placement is already
+    correct (``old == new``) so their transfer is skipped.
+
+    A leaf whose source and target shardings live on different device sets
+    (migrating a replica between disjoint mesh slices) falls back to a host
+    round-trip: not every supported jax version can transfer a committed
+    array directly across meshes, and the values are bit-identical either
+    way.
+    """
+    flat_t, tdef = jax.tree.flatten(tree)
+    flat_new = tdef.flatten_up_to(new_shardings)
+    flat_old = (tdef.flatten_up_to(old_shardings)
+                if old_shardings is not None else [None] * len(flat_t))
+
+    def place(x, new, old):
+        if new is None or (old is not None and old == new):
+            return x
+        try:
+            return jax.device_put(x, new)
+        except (ValueError, RuntimeError):
+            return jax.device_put(np.asarray(x), new)
+
+    return tdef.unflatten(
+        [place(x, n, o) for x, n, o in zip(flat_t, flat_new, flat_old)])
 
 
 def _path_keys(path) -> list[str]:

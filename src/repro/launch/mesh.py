@@ -39,23 +39,41 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model"), devices=None):
     return Mesh(devs, axes)
 
 
-def slice_device_pool(shapes, axes=("data", "model"), devices=None):
+def slice_device_pool(shapes, axes=("data", "model"), devices=None, *,
+                      allow_remainder: bool = True,
+                      return_remainder: bool = False):
     """Partition a device pool into disjoint mesh slices, one per shape.
 
     The heterogeneous-fleet constructor: ``shapes=[(1, 1), (2, 1), (2, 2)]``
     carves 7 of the pool's devices into three replicas of mixed size (the
     paper's non-uniform PEs).  Slices never share devices; a pool too small
-    for the requested shapes raises.
+    for the requested shapes raises with the exact shortfall.
+
+    Shapes that don't tile the pool leave devices over; those are no longer
+    dropped silently: ``return_remainder=True`` returns ``(meshes,
+    remainder)`` so the caller can re-carve the spare devices on a later
+    resize event, and ``allow_remainder=False`` raises when any device would
+    go unused (the strict fleet-spec contract).
     """
     pool = list(jax.devices()) if devices is None else list(devices)
     need = sum(math.prod(s) for s in shapes)
     if need > len(pool):
         raise ValueError(
-            f"device pool has {len(pool)} devices; shapes {list(shapes)} "
-            f"need {need}")
+            f"device pool oversubscribed: shapes {list(shapes)} need {need} "
+            f"devices but the pool has only {len(pool)} ({need - len(pool)} "
+            f"short) — drop a slice, shrink a shape, or grow the pool")
     meshes, off = [], 0
     for shape in shapes:
         n = math.prod(shape)
         meshes.append(make_debug_mesh(tuple(shape), axes, pool[off:off + n]))
         off += n
+    remainder = pool[off:]
+    if remainder and not allow_remainder:
+        raise ValueError(
+            f"shapes {list(shapes)} use {off} of {len(pool)} devices, "
+            f"leaving {len(remainder)} unused — pass allow_remainder=True "
+            f"to keep the spares (return_remainder=True hands them back "
+            f"for re-carving)")
+    if return_remainder:
+        return meshes, remainder
     return meshes

@@ -9,6 +9,12 @@ the local device pool into mesh slices instead (``--mesh-shapes 1x1,2x1,2x2``
 with enough devices, e.g. under ``XLA_FLAGS=--xla_force_host_platform_
 device_count=8``): each replica is a real ``repro.dist`` substrate and the
 HEFT_RT front end maps requests across the heterogeneous slices.
+
+``--reshard-to 2x2`` (with ``--sharded``) demonstrates the elastic path:
+after the first batch, replica 0 migrates *live* onto a new slice carved
+from the pool's leftover devices (``ServeEngine.reshard`` — params move in
+memory, no checkpoint), then serves the same requests again; outputs are
+verified token-identical across the migration.
 """
 
 from __future__ import annotations
@@ -35,6 +41,10 @@ def main() -> None:
     ap.add_argument("--mesh-shapes", default="1x1",
                     help="comma-separated slice shapes for --sharded, "
                          "e.g. 1x1,2x1,2x2")
+    ap.add_argument("--reshard-to", default=None, metavar="AxB",
+                    help="with --sharded: after serving, migrate replica 0 "
+                         "live onto a slice of this shape carved from the "
+                         "leftover devices, and re-verify outputs")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -42,12 +52,15 @@ def main() -> None:
     print(f"[serve] arch={cfg.name} params={cfg.param_count()/1e6:.2f}M "
           f"devices={jax.device_count()}")
 
+    spare = []
     if args.sharded:
         shapes = [tuple(int(d) for d in s.split("x"))
                   for s in args.mesh_shapes.split(",")]
-        fleet = mesh_backed_fleet(cfg, params, shapes, max_len=128)
+        fleet, spare = mesh_backed_fleet(cfg, params, shapes, max_len=128,
+                                         return_spare=True)
         print(f"[serve] mesh-backed fleet: "
-              f"{[r.mesh_shape for r in fleet]} slices")
+              f"{[r.mesh_shape for r in fleet]} slices "
+              f"({len(spare)} spare devices)")
     else:
         speeds = [1.0, 0.7, 1.4][: args.replicas] or [1.0]
         fleet = [ReplicaHandle(f"replica{i}(x{s})",
@@ -68,6 +81,30 @@ def main() -> None:
           f"({sum(len(p)+args.new_tokens for p,_ in requests)/dt:.0f} tok/s)")
     print(f"[serve] request distribution (HEFT_RT): {counts}")
     print(f"[serve] sample output ids: {outs[0][0, -8:].tolist()}")
+
+    if args.reshard_to:
+        if not args.sharded:
+            raise SystemExit("--reshard-to requires --sharded")
+        from repro.launch.mesh import make_debug_mesh
+
+        shape = tuple(int(d) for d in args.reshard_to.split("x"))
+        need = int(np.prod(shape))
+        if len(spare) < need:
+            raise SystemExit(
+                f"--reshard-to {args.reshard_to} needs {need} spare devices, "
+                f"pool has {len(spare)} left after the fleet slices")
+        target = make_debug_mesh(shape, devices=spare[:need])
+        old = fleet[0].mesh_shape
+        fleet[0].engine.reshard(target)
+        fleet[0].sync_mesh_identity()     # speed/rates follow the new slice
+        print(f"[serve] replica 0 resharded live: {old} -> "
+              f"{fleet[0].mesh_shape} (speed x{fleet[0].speed:.0f})")
+        outs2, _ = front.run_batch(requests)
+        same = all(np.array_equal(a, b) for a, b in zip(outs, outs2))
+        print(f"[serve] post-reshard outputs "
+              f"{'token-identical' if same else 'MISMATCH'}")
+        if not same:
+            raise SystemExit(1)     # the verification must fail loudly
 
 
 if __name__ == "__main__":

@@ -94,8 +94,12 @@ def make_dispatch_fabric(backend: str = "auto", **fabric_kw):
     def dispatch(avg, exec_times, avail, capacity):
         nonlocal fab
         P = exec_times.shape[1]
-        if fab is None or fab.num_pes != P:
+        if fab is None:
             fab = MappingFabric(P, backend=backend, **fabric_kw)
+        elif fab.num_pes != P:
+            # elastic PE pool: resize in place (avail is explicit here, so
+            # only the compiled-dispatch cache is worth preserving)
+            fab.resize(P)
         return fab.dispatch(avg, exec_times, avail, capacity)
 
     return dispatch

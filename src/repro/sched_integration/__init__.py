@@ -31,6 +31,15 @@ from repro.sched_integration.serve_scheduler import (
     mesh_fleet,
     simulate_serving,
 )
+from repro.sched_integration.fleet import (
+    FleetController,
+    FleetControllerConfig,
+    ResizeEvent,
+    grown_replica_factory,
+    make_spike_requests,
+    merge_event,
+    split_event,
+)
 
 __all__ = [
     "apply_placement", "makespan", "placement_permutation",
@@ -41,4 +50,7 @@ __all__ = [
     "make_policy_fabric", "service_time_matrix",
     "POLICIES", "Replica", "Request", "ServeResult", "default_fleet",
     "make_requests", "mesh_fleet", "simulate_serving",
+    "FleetController", "FleetControllerConfig", "ResizeEvent",
+    "grown_replica_factory", "make_spike_requests", "merge_event",
+    "split_event",
 ]

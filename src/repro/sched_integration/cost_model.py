@@ -70,6 +70,7 @@ class CostCell:
     flops_per_device: float
     bytes_per_device: float
     wire_bytes_per_device: float = 0.0
+    projected: bool = False         # scaled_cell output, not a measurement
 
     def __post_init__(self):
         if self.kind not in _SERVE_KINDS:
@@ -180,6 +181,41 @@ class CostModelRegistry:
         return all(self.cell(arch, k, mesh_shape) is not None
                    for k in _SERVE_KINDS)
 
+    def ensure_coverage(self, replica, *, efficiency: float = 0.9) -> bool:
+        """Cover a replica whose mesh shape was never dry-run by projection.
+
+        Elastic resize events add replicas with shapes that may have no
+        measured cells yet; rather than dropping those columns to the blank
+        roofline, the arch's *largest* measured cell per kind is projected
+        onto the new shape with :func:`scaled_cell` (the measured anchor
+        plus the ``efficiency`` overhead gradient).  Cells that are
+        themselves projections are never used as anchors — otherwise the
+        discount would compound and the estimates would depend on join
+        order.  Registration is atomic: either both serve kinds end up
+        covered or nothing is registered.  Returns whether the replica is
+        covered afterwards.
+        """
+        arch = getattr(replica, "arch", None)
+        mesh_shape = getattr(replica, "mesh_shape", None)
+        if arch is None or mesh_shape is None:
+            return False
+        target = _mesh_shape_of(mesh_shape)
+        missing = [k for k in _SERVE_KINDS
+                   if (arch, k, target) not in self._cells]
+        if not missing:
+            return True
+        chosen = {}
+        for kind in missing:
+            srcs = [c for (a, k, _), c in self._cells.items()
+                    if a == arch and k == kind and not c.projected]
+            if not srcs:
+                return False
+            chosen[kind] = max(srcs, key=lambda c: (c.num_devices,
+                                                    c.mesh_shape))
+        for src in chosen.values():
+            self.register(scaled_cell(src, target, efficiency=efficiency))
+        return True
+
     # -- estimates -----------------------------------------------------------
 
     def column_s(self, replica, prefill_tokens, decode_tokens):
@@ -261,4 +297,5 @@ def scaled_cell(cell: CostCell, mesh_shape, *, efficiency: float = 1.0
         flops_per_device=cell.flops_per_device * ratio,
         bytes_per_device=cell.bytes_per_device * ratio,
         wire_bytes_per_device=cell.wire_bytes_per_device,
+        projected=True,
     )

@@ -10,7 +10,11 @@ the fabric*:
 
 * **Bucketed shapes.**  Ready queues are padded to power-of-two M-buckets
   (``bucket_size``) so the persistent jitted dispatch compiles O(log D_max)
-  variants instead of one per queue length.
+  variants instead of one per queue length.  The PE axis gets the same
+  treatment (``p_bucket``): P is *state*, not a constant — ``grow`` /
+  ``shrink`` / ``remap`` resize the pool mid-stream carrying committed
+  ``T_avail`` bit-exact, and resizes inside a P bucket reuse every compiled
+  variant.
 * **Device-resident availability registers.**  The jitted dispatch is built
   with ``donate_argnums`` on ``T_avail``, so the availability registers live
   on device across mapping events (the paper's PE-handler register file) and
@@ -188,10 +192,18 @@ class MappingFabric:
     """Persistent HEFT_RT dispatch pipeline with bucketed shapes and
     device-resident availability registers.
 
+    The P axis is *state*, not a constant: :meth:`grow` / :meth:`shrink` /
+    :meth:`remap` resize or relabel the PE pool mid-stream while carrying
+    the committed ``T_avail`` registers across the resize (the paper's PE
+    pool whose effective composition changes at runtime).  Device backends
+    pad P to a power-of-two bucket (``+inf`` exec columns, exactly like the
+    queue-depth bucketing), so resize events inside a bucket reuse the
+    compiled dispatch — no re-trace per event.
+
     Parameters
     ----------
     num_pes:
-        Number of PEs / replicas (the fixed P axis).
+        Initial number of PEs / replicas (the variable P axis).
     backend:
         ``"numpy"`` (oracle-exact host fast path), ``"jit"`` (persistent
         jitted ``heft_rt``), ``"pallas"`` (fused overlay kernel,
@@ -200,6 +212,9 @@ class MappingFabric:
     min_bucket / max_bucket:
         Ready queues are padded to the next power of two in
         ``[min_bucket, max_bucket]``; exceeding ``max_bucket`` raises.
+    min_pe_bucket:
+        Smallest P bucket for the device backends (padding headroom so
+        small grows stay inside one compiled variant).
     interpret:
         Force the Pallas interpret mode on/off (None: on iff not on TPU).
     avail:
@@ -208,6 +223,7 @@ class MappingFabric:
 
     def __init__(self, num_pes: int, *, backend: str = "auto",
                  min_bucket: int = 8, max_bucket: int = 1 << 16,
+                 min_pe_bucket: int = 4,
                  interpret: bool | None = None, avail=None):
         if backend == "auto":
             backend = default_backend()
@@ -217,10 +233,12 @@ class MappingFabric:
         self.backend = backend
         self.min_bucket = int(min_bucket)
         self.max_bucket = int(max_bucket)
+        self.min_pe_bucket = int(min_pe_bucket)
         self._interpret = interpret
         self._event_fn_cached = None
         self._batch_fn_cached = None
         self._events = 0
+        self._resizes = 0
         self.reset(avail)
 
     # -- availability registers ---------------------------------------------
@@ -234,17 +252,93 @@ class MappingFabric:
         if self.backend == "numpy":
             self._avail = a.copy()
         else:
-            self._avail = jnp.asarray(a, dtype=jnp.float32)
+            # Registers live padded to the P bucket on device; padded lanes
+            # carry +inf exec columns in every event, so they are never
+            # selected and their register values are inert.
+            self._avail = jnp.asarray(self._pad_avail(a))
+
+    def _pad_avail(self, a) -> np.ndarray:
+        pad = np.zeros(self.p_bucket, dtype=np.float32)
+        pad[: self.num_pes] = a
+        return pad
 
     @property
     def avail(self) -> np.ndarray:
-        """Current availability registers as host values."""
-        return np.asarray(self._avail)
+        """Current availability registers as host values (logical P only)."""
+        return np.asarray(self._avail)[: self.num_pes]
 
     @property
     def events(self) -> int:
         """Mapping events dispatched through this fabric (single + batched)."""
         return self._events
+
+    @property
+    def resizes(self) -> int:
+        """Resize events (grow/shrink/remap/resize) applied to the PE pool."""
+        return self._resizes
+
+    # -- variable-P resize events -------------------------------------------
+
+    def grow(self, new_p: int, *, avail: float = 0.0) -> None:
+        """Extend the PE pool to ``new_p`` lanes; joiners start at ``avail``.
+
+        Existing registers are carried bit-exact; a grow inside the current
+        P bucket reuses every compiled dispatch variant (the resize costs one
+        host→device register reload, never a re-trace).
+        """
+        new_p = int(new_p)
+        if new_p < self.num_pes:
+            raise ValueError(
+                f"grow target {new_p} < current num_pes={self.num_pes} "
+                f"(use shrink(keep_idx) to drop PEs)")
+        joined = np.full(new_p - self.num_pes, float(avail))
+        self._set_registers(np.concatenate([self.avail, joined]), new_p)
+
+    def shrink(self, keep_idx) -> None:
+        """Drop PEs, keeping (and reordering to) ``keep_idx``.
+
+        ``keep_idx`` lists the surviving PE indices in their new order; the
+        survivors' committed availability is carried bit-exact.
+        """
+        keep = np.asarray(keep_idx, dtype=np.int64)
+        if keep.ndim != 1 or len(keep) == 0:
+            raise ValueError("keep_idx must be a non-empty 1-D index list")
+        if len(np.unique(keep)) != len(keep):
+            raise ValueError(f"keep_idx has duplicates: {keep.tolist()}")
+        if keep.min() < 0 or keep.max() >= self.num_pes:
+            raise ValueError(
+                f"keep_idx {keep.tolist()} out of range for num_pes="
+                f"{self.num_pes}")
+        self._set_registers(self.avail[keep], len(keep))
+
+    def remap(self, old_to_new) -> None:
+        """Relabel PEs: register at old index ``i`` moves to ``old_to_new[i]``.
+
+        ``old_to_new`` must be a permutation of ``range(num_pes)`` (replicas
+        migrating between fleet slots without changing P).
+        """
+        perm = np.asarray(old_to_new, dtype=np.int64)
+        if (perm.shape != (self.num_pes,)
+                or not np.array_equal(np.sort(perm), np.arange(self.num_pes))):
+            raise ValueError(
+                f"old_to_new must be a permutation of range({self.num_pes}), "
+                f"got {perm.tolist()}")
+        new = np.empty(self.num_pes, dtype=np.float64)
+        new[perm] = self.avail
+        self._set_registers(new, self.num_pes)
+
+    def resize(self, new_p: int) -> None:
+        """Convenience: grow to ``new_p`` (joiners at 0) or shrink keeping
+        the first ``new_p`` lanes — the policy-facing P change."""
+        if new_p > self.num_pes:
+            self.grow(new_p)
+        elif new_p < self.num_pes:
+            self.shrink(np.arange(new_p))
+
+    def _set_registers(self, host_avail, new_p: int) -> None:
+        self.num_pes = int(new_p)
+        self._resizes += 1
+        self.reset(host_avail)
 
     # -- bucketing -----------------------------------------------------------
 
@@ -256,8 +350,22 @@ class MappingFabric:
             raise ValueError(f"queue length {n} exceeds max_bucket={self.max_bucket}")
         return b
 
+    @property
+    def p_bucket(self) -> int:
+        """Power-of-two P bucket the device backends pad the PE axis to."""
+        b = max(self.num_pes, self.min_pe_bucket, 1)
+        return 1 << (b - 1).bit_length()
+
+    def _check_p(self, exec_times) -> None:
+        if exec_times.shape[-1] != self.num_pes:
+            raise ValueError(
+                f"exec_times has {exec_times.shape[-1]} PE columns but the "
+                f"fabric's pool is num_pes={self.num_pes} — resize the "
+                f"fabric (grow/shrink) before dispatching")
+
     def _pad_event(self, avg, exec_times):
-        """Pad one event to its bucket: sanitized keys, +inf exec, valid mask."""
+        """Pad one event to its buckets: sanitized keys, +inf exec (both for
+        padded queue slots and padded PE lanes), valid mask."""
         n, P = exec_times.shape
         D = self.bucket_size(n)
         # NaN keys (nanmean of an all-inf row) must sort behind every finite
@@ -265,8 +373,13 @@ class MappingFabric:
         # because the stable sort breaks the tie by slot index (< n).
         a = np.full(D, -_INF, dtype=np.float32)
         a[:n] = np.where(np.isnan(avg), -_INF, np.asarray(avg, dtype=np.float32))
-        ex = np.full((D, P), _INF, dtype=np.float32)
-        ex[:n] = exec_times
+        # Padded PE lanes carry +inf exec: argmin's first-minimum tie-break
+        # means a padded lane can never beat a real lane (finite beats inf,
+        # and an all-inf row resolves to the first — real — lane, which the
+        # valid/finite guard then maps to assignment -1 exactly like the
+        # oracle).
+        ex = np.full((D, self.p_bucket), _INF, dtype=np.float32)
+        ex[:n, :P] = exec_times
         valid = np.arange(D) < n
         return a, ex, valid
 
@@ -319,6 +432,7 @@ class MappingFabric:
         """
         exec_times = np.asarray(exec_times)
         avg = np.asarray(avg)
+        self._check_p(exec_times)
         n = exec_times.shape[0]
         use_resident = avail is None
         if update is None:
@@ -336,13 +450,14 @@ class MappingFabric:
             # the registers left alone, donate a copy instead.
             av_in = self._avail if update else jnp.array(self._avail, copy=True)
         else:
-            av_in = jnp.asarray(np.asarray(avail, dtype=np.float32))
+            av_in = jnp.asarray(
+                self._pad_avail(np.asarray(avail, dtype=np.float64)))
         res = self._event_fn()(a_p, ex_p, av_in, valid)
         if update:
             self._avail = res.new_avail
         out = (np.asarray(res.order)[:n], np.asarray(res.assignment)[:n],
                np.asarray(res.start_time)[:n], np.asarray(res.finish_time)[:n],
-               np.asarray(res.new_avail))
+               np.asarray(res.new_avail)[: self.num_pes])
         return out
 
     def map_batch(self, avg, exec_times, avail) -> ScheduleResult:
@@ -357,6 +472,7 @@ class MappingFabric:
         avg = np.asarray(avg)
         exec_times = np.asarray(exec_times)
         avail_np = np.asarray(avail)
+        self._check_p(exec_times)
         B, D = avg.shape
         self._events += B
         if self.backend == "numpy":
@@ -365,18 +481,19 @@ class MappingFabric:
             return ScheduleResult(*(np.stack(cols) for cols in zip(*outs)))
         Db = self.bucket_size(D)
         Bb = self.bucket_size(B)
+        Pb = self.p_bucket
         a_p = np.full((Bb, Db), -_INF, dtype=np.float32)
         a_p[:B, :D] = np.where(np.isnan(avg), -_INF, avg)
-        ex_p = np.full((Bb, Db, exec_times.shape[2]), _INF, dtype=np.float32)
-        ex_p[:B, :D] = exec_times
-        av_p = np.zeros((Bb, avail_np.shape[1]), dtype=np.float32)
-        av_p[:B] = avail_np
+        ex_p = np.full((Bb, Db, Pb), _INF, dtype=np.float32)
+        ex_p[:B, :D, : self.num_pes] = exec_times
+        av_p = np.zeros((Bb, Pb), dtype=np.float32)
+        av_p[:B, : self.num_pes] = avail_np
         valid = np.zeros((Bb, Db), dtype=bool)
         valid[:B, :D] = True
         res = self._batch_fn()(a_p, ex_p, jnp.asarray(av_p), valid)
         return ScheduleResult(res.order[:B, :D], res.assignment[:B, :D],
                               res.start_time[:B, :D], res.finish_time[:B, :D],
-                              res.new_avail[:B])
+                              res.new_avail[:B, : self.num_pes])
 
     # -- consumer-facing contracts ------------------------------------------
 
@@ -392,6 +509,7 @@ class MappingFabric:
         overhead.)
         """
         exec_times = np.asarray(exec_times)
+        self._check_p(exec_times)
         n, P = exec_times.shape
         if self.backend == "numpy":
             ex = np.asarray(exec_times, dtype=np.float64)
@@ -436,9 +554,12 @@ def make_policy_fabric(backend: str | None = None):
     """Serving-policy factory backed by a :class:`MappingFabric`.
 
     The returned policy matches ``policy_heft_rt`` decision-for-decision;
-    the fabric is created lazily so one factory works for any fleet size.
-    ``backend=None`` honours ``REPRO_FABRIC_BACKEND`` (the CI backend
-    matrix) and defaults to the oracle-exact numpy host path otherwise.
+    the fabric is created lazily so one factory works for any fleet size,
+    and a *fleet-size change mid-stream* (elastic resize events) resizes the
+    live fabric instead of rebuilding it — the compiled dispatch variants
+    survive every resize inside a P bucket.  ``backend=None`` honours
+    ``REPRO_FABRIC_BACKEND`` (the CI backend matrix) and defaults to the
+    oracle-exact numpy host path otherwise.
     """
     if backend is None:
         backend = _env_backend() or "numpy"
@@ -446,8 +567,12 @@ def make_policy_fabric(backend: str | None = None):
 
     def policy(exec_times, avail):
         nonlocal fab
-        if fab is None or fab.num_pes != exec_times.shape[1]:
+        if fab is None:
             fab = MappingFabric(exec_times.shape[1], backend=backend)
+        elif fab.num_pes != exec_times.shape[1]:
+            # registers are irrelevant here (the policy passes avail
+            # explicitly), so the prefix-keeping resize is safe
+            fab.resize(exec_times.shape[1])
         return fab.assign(exec_times, avail)
 
     return policy

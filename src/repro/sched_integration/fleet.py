@@ -1,0 +1,229 @@
+"""Elastic fleet subsystem: resize events + a load-driven fleet controller.
+
+The paper schedules *dynamically arriving* work onto a PE pool whose
+availability state lives in fabric registers — and on real SoCs the pool
+itself is dynamic too: PEs are power-gated, reclaimed, or re-partitioned at
+runtime (HTS, arXiv:1907.00271; Mack et al., arXiv:2112.08980).  The serving
+analogue is an *elastic fleet*: replicas join/leave mid-run and mesh slices
+split/merge as load shifts.  This module is the control plane for that:
+
+* :class:`ResizeEvent` — one timeline entry: at time ``t``, remove replicas
+  by name and/or add new :class:`~repro.sched_integration.serve_scheduler.
+  Replica`s.  ``simulate_serving(fleet_events=[...])`` replays a scripted
+  timeline; an empty timeline is bit-identical to the fixed-fleet simulator.
+* :func:`split_event` / :func:`merge_event` — re-carve a replica's devices
+  into smaller slices (or several replicas into one bigger slice), the
+  simulator-side mirror of ``launch.mesh.slice_device_pool`` re-carving.
+  Device counts must balance exactly; rates re-aggregate per device.
+* :class:`FleetController` — the closed loop: consumes load signals (ready-
+  queue depth, p95 latency) each mapping event, and emits grow/shrink
+  ``ResizeEvent``s with a cooldown, recording a human-readable decision
+  trace.  ``simulate_serving(controller=...)`` drives it from the simulator;
+  the live-engine side drives :meth:`HeftFrontEnd.add_replica` /
+  ``remove_replica`` (whose attached ``MappingFabric`` grows/shrinks its
+  T_avail registers in place) plus ``ServeEngine.reshard`` for migrations.
+
+Cost-model coupling: a replica added with a mesh shape that was never
+dry-run gets its Exec_TID cells projected from the arch's largest measured
+cell (``CostModelRegistry.ensure_coverage`` → ``scaled_cell``), so mid-run
+joiners are scheduled from calibrated estimates, not the blank roofline.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.sched_integration.serve_scheduler import Replica, Request
+
+
+@dataclass(frozen=True)
+class ResizeEvent:
+    """One fleet-resize step: at ``t``, drop ``remove`` (names), then join
+    ``add`` (Replica objects).  Removal stops *new* assignments; work already
+    committed to a removed replica finishes undisturbed (drain-then-leave)."""
+
+    t: float
+    add: tuple = ()
+    remove: tuple = ()
+    reason: str = ""
+
+
+def _unit_rates(rep: Replica) -> tuple[float, float]:
+    """Per-device (compute, hbm) rates from a mesh-backed replica's
+    aggregates."""
+    if rep.mesh_shape is None:
+        raise ValueError(
+            f"replica {rep.name!r} has no mesh_shape — split/merge re-carve "
+            f"devices, so only mesh-backed replicas can resize")
+    n = math.prod(rep.mesh_shape)
+    return rep.compute_tflops / n, rep.hbm_gbps / n
+
+
+def split_event(t: float, rep: Replica, shapes, *, reason: str = "") -> ResizeEvent:
+    """Re-carve one replica's devices into smaller slices.
+
+    ``shapes`` must tile the replica's device count exactly (the
+    ``slice_device_pool`` contract); aggregate rates redistribute
+    per-device.
+    """
+    ct, hb = _unit_rates(rep)          # validates mesh backing first
+    shapes = [tuple(int(d) for d in s) for s in shapes]
+    n = math.prod(rep.mesh_shape)
+    need = sum(math.prod(s) for s in shapes)
+    if need != n:
+        raise ValueError(
+            f"split of {rep.name!r}: shapes {shapes} use {need} devices but "
+            f"the replica's {rep.mesh_shape} slice has {n}")
+    adds = tuple(
+        Replica(f"{rep.name}/s{i}", math.prod(s) * ct, math.prod(s) * hb,
+                arch=rep.arch, mesh_shape=s, ici_gbps=rep.ici_gbps)
+        for i, s in enumerate(shapes))
+    return ResizeEvent(t, add=adds, remove=(rep.name,),
+                       reason=reason or f"split {rep.name} -> {shapes}")
+
+
+def merge_event(t: float, reps, shape, *, name: str | None = None,
+                reason: str = "") -> ResizeEvent:
+    """Merge several replicas' devices into one bigger slice.
+
+    The merged slice's device count must equal the sum of the parts; all
+    parts must share per-device rates (one chip generation per merge, the
+    ``slice_device_pool`` pool contract) — mixing generations would credit
+    the merged slice the wrong aggregate capacity.
+    """
+    reps = list(reps)
+    rates = [_unit_rates(r) for r in reps]          # validates mesh backing
+    (ct, hb), *rest = rates
+    if any(not (math.isclose(c, ct, rel_tol=1e-9)
+                and math.isclose(h, hb, rel_tol=1e-9)) for c, h in rest):
+        raise ValueError(
+            f"merge of {[r.name for r in reps]}: parts have mixed "
+            f"per-device rates {rates} — one chip generation per merge")
+    shape = tuple(int(d) for d in shape)
+    total = sum(math.prod(r.mesh_shape) for r in reps)
+    if math.prod(shape) != total:
+        raise ValueError(
+            f"merge of {[r.name for r in reps]}: target {shape} has "
+            f"{math.prod(shape)} devices but the parts hold {total}")
+    n = math.prod(shape)
+    merged = Replica(name or f"{reps[0].name}/m{'x'.join(map(str, shape))}",
+                     n * ct, n * hb, arch=reps[0].arch, mesh_shape=shape,
+                     ici_gbps=reps[0].ici_gbps)
+    return ResizeEvent(t, add=(merged,), remove=tuple(r.name for r in reps),
+                       reason=reason or
+                       f"merge {[r.name for r in reps]} -> {shape}")
+
+
+@dataclass
+class FleetControllerConfig:
+    """Thresholds for the grow/shrink loop.
+
+    Grow when ANY enabled signal crosses its threshold (``inf`` disables
+    one): ``grow_backlog_s`` — mean committed-but-unfinished work per
+    replica, in seconds of queue horizon (the serving analogue of the
+    paper's ``T_avail`` registers running ahead of the clock);
+    ``grow_queue_depth`` — ready requests awaiting dispatch;
+    ``grow_p95_s`` — p95 latency over requests *committed in the last*
+    ``p95_window_s`` *seconds* (their estimated completion; in the
+    simulator a commit pins the finish time).  The window matters: a
+    cumulative p95 would latch "overloaded" forever after one spike.
+    Shrink (retire the most recent grown replica) when the backlog AND
+    queue are both at or under their shrink thresholds and no grow signal
+    is firing — shrinking while overloaded would just oscillate against
+    the next grow.  ``cooldown_s`` rate-limits decisions; ``max_grown``
+    bounds concurrently grown replicas (the spare-device budget).
+    """
+
+    grow_backlog_s: float = 2.0
+    grow_queue_depth: float = float("inf")
+    grow_p95_s: float = float("inf")
+    p95_window_s: float = 5.0
+    shrink_backlog_s: float = 0.25
+    shrink_queue_depth: float = 2.0
+    cooldown_s: float = 0.5
+    max_grown: int = 4
+
+
+class FleetController:
+    """Load signals → :class:`ResizeEvent`s, with a decision trace.
+
+    ``make_replica(idx)`` is the grow factory — it returns the Replica a
+    grow decision adds (e.g. a ``(2, 2)`` slice carved from the spare
+    device pool; see :func:`grown_replica_factory`).  The controller owns
+    the lifecycle of what it adds: shrink decisions retire its own grown
+    replicas (most recent first) and never touch the base fleet.
+    """
+
+    def __init__(self, cfg: FleetControllerConfig, make_replica):
+        self.cfg = cfg
+        self._make = make_replica
+        self.grown: list[str] = []
+        self.trace: list[tuple[float, str, str]] = []
+        self._last_t = -float("inf")
+        self._next_id = 0
+
+    def observe(self, t: float, *, queue_depth: int = 0,
+                backlog_s: float = 0.0,
+                p95_s: float = 0.0) -> ResizeEvent | None:
+        """One control tick.  Returns the resize to apply now, or None."""
+        cfg = self.cfg
+        if t - self._last_t < cfg.cooldown_s:
+            return None
+        overloaded = (backlog_s >= cfg.grow_backlog_s
+                      or queue_depth >= cfg.grow_queue_depth
+                      or p95_s >= cfg.grow_p95_s)
+        if overloaded and len(self.grown) < cfg.max_grown:
+            rep = self._make(self._next_id)
+            self._next_id += 1
+            self.grown.append(rep.name)
+            self._last_t = t
+            p95 = f" p95={p95_s * 1e3:.0f}ms" if p95_s > 0 else ""
+            why = (f"backlog={backlog_s:.2f}s queue={queue_depth}{p95} "
+                   f"-> +{rep.name}")
+            self.trace.append((t, "grow", why))
+            return ResizeEvent(t, add=(rep,), reason=why)
+        drained = (backlog_s <= cfg.shrink_backlog_s
+                   and queue_depth <= cfg.shrink_queue_depth)
+        if drained and not overloaded and self.grown:
+            name = self.grown.pop()
+            self._last_t = t
+            why = f"backlog={backlog_s:.2f}s queue={queue_depth} -> -{name}"
+            self.trace.append((t, "shrink", why))
+            return ResizeEvent(t, remove=(name,), reason=why)
+        return None
+
+
+def grown_replica_factory(arch: str, shape, *, chip_tflops: float = 197.0,
+                          chip_hbm_gbps: float = 819.0, mfu: float = 0.5,
+                          hbm_eff: float = 0.6, ici_gbps: float = 0.0):
+    """``make_replica`` factory for :class:`FleetController`: each grow adds
+    one ``shape``-slice replica of the given chip generation (the same rate
+    model as ``mesh_fleet``)."""
+    shape = tuple(int(d) for d in shape)
+    n = math.prod(shape)
+
+    def make(idx: int) -> Replica:
+        return Replica(f"{arch}@{'x'.join(map(str, shape))}+g{idx}",
+                       n * chip_tflops * mfu, n * chip_hbm_gbps * hbm_eff,
+                       arch=arch, mesh_shape=shape, ici_gbps=ici_gbps)
+
+    return make
+
+
+def make_spike_requests(base_rps: float, spike_rps: float, *,
+                        spike_start: float, spike_end: float,
+                        duration_s: float, seed: int = 0,
+                        prefill_range=(128, 4096),
+                        decode_range=(16, 512)) -> list[Request]:
+    """Poisson arrivals with a rate spike in ``[spike_start, spike_end)`` —
+    the scripted-load workload the elastic example/benchmark replay.  One
+    ``make_requests`` rate function, not a second arrival loop."""
+    from repro.sched_integration.serve_scheduler import make_requests
+
+    return make_requests(
+        lambda t: spike_rps if spike_start <= t < spike_end else base_rps,
+        duration_s, seed=seed,
+        prefill_range=prefill_range, decode_range=decode_range)

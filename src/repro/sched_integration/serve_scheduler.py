@@ -67,12 +67,24 @@ def service_time_s(req: Request, rep: Replica, *, active_params: float) -> float
             + decode_bytes / (rep.hbm_gbps * 1e9))
 
 
-def make_requests(rate_rps: float, duration_s: float, seed: int = 0,
+def make_requests(rate_rps, duration_s: float, seed: int = 0,
                   prefill_range=(128, 4096), decode_range=(16, 512)):
+    """Poisson arrivals at ``rate_rps`` — a constant, or a ``rate(t)``
+    callable for time-varying load (a constant draws identically to the
+    pre-callable version; ``fleet.make_spike_requests`` builds spikes on
+    top of this).  The rate must stay positive — model a quiet interval
+    with a small positive rate, not zero (the exponential gap would be
+    infinite)."""
+    rate = rate_rps if callable(rate_rps) else (lambda t: rate_rps)
     rng = np.random.default_rng(seed)
     t, out, rid = 0.0, [], 0
     while True:
-        t += rng.exponential(1.0 / rate_rps)
+        r = float(rate(t))
+        if r <= 0.0:
+            raise ValueError(
+                f"rate(t={t:.3f}) = {r} — arrival rates must be positive "
+                f"(use a small rate for quiet intervals, not zero)")
+        t += rng.exponential(1.0 / r)
         if t > duration_s:
             break
         out.append(Request(
@@ -142,13 +154,16 @@ class ServeResult:
     p99_latency: float
     mean_latency: float
     replica_util: np.ndarray
+    served_mask: np.ndarray | None = None   # per-request served flags (N,)
 
 
 def simulate_serving(replicas: list[Replica], requests: list[Request],
                      policy, *, active_params: float,
                      sched_tick_s: float = 0.005,
                      exec_matrix: np.ndarray | None = None,
-                     cost_registry=None) -> ServeResult:
+                     cost_registry=None,
+                     fleet_events=None,
+                     controller=None) -> ServeResult:
     """Tick-based continuous dispatch, event-horizon-driven: at every tick
     with arrived work, the ready queue is mapped by ``policy`` onto replica
     queues and committed in one vectorized pass; ticks with no ready work
@@ -161,11 +176,34 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
     :class:`~repro.sched_integration.cost_model.CostModelRegistry`) derives
     the Exec_TID matrix from dry-run cost cells for mesh-backed replicas,
     with the roofline as fallback for uncovered (arch × mesh) cells.
+
+    Elastic fleet: ``fleet_events`` is a timeline of
+    :class:`~repro.sched_integration.fleet.ResizeEvent`s (replicas join /
+    leave / split / merge at their event times); ``controller`` (a
+    :class:`~repro.sched_integration.fleet.FleetController`) closes the loop
+    instead, observing (queue depth, p95 latency) at each mapping event and
+    emitting resizes live.  Both recompute the Exec_TID columns for the new
+    fleet mid-run — from ``cost_registry`` when given (joiners with never-
+    dry-run shapes get ``scaled_cell``-projected cells via
+    ``ensure_coverage``), roofline otherwise — and both are incompatible
+    with a pinned ``exec_matrix``.  An empty/None timeline leaves every code
+    path untouched: results are bit-identical to the fixed-fleet simulator.
+    Removal is drain-then-leave (committed work finishes; no new
+    assignments).  With an elastic fleet, ``replica_util`` covers the final
+    roster.
     """
+    replicas = list(replicas)
     P = len(replicas)
     N = len(requests)
     arrivals = np.array([r.arrival for r in requests])
+    events = sorted(fleet_events, key=lambda e: e.t) if fleet_events else []
+    elastic = bool(events) or controller is not None
     if exec_matrix is not None:
+        if elastic:
+            raise ValueError(
+                "fleet_events/controller recompute Exec_TID columns as the "
+                "fleet resizes — use cost_registry or the roofline, not a "
+                "pinned exec_matrix")
         ex_all = np.asarray(exec_matrix, dtype=np.float64)
     elif cost_registry is not None:
         ex_all = cost_registry.exec_tid_matrix(requests, replicas,
@@ -184,8 +222,50 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
     busy = [0.0] * P
     finish_all = np.full(N, np.nan)              # per-request finish (NaN: unserved)
     ready: list[int] = []                        # request indices awaiting dispatch
+    done_lat: list[tuple[float, float]] = []     # (commit_t, latency) window
+    # Only pay for the p95 signal when the controller consults it, and keep
+    # it *windowed*: a cumulative percentile would latch "overloaded"
+    # forever after one spike (and grow O(N log N) per mapping event).
+    ctl_cfg = getattr(controller, "cfg", None)
+    p95_enabled = (controller is not None
+                   and np.isfinite(getattr(ctl_cfg, "grow_p95_s", np.inf)))
+    p95_window_s = float(getattr(ctl_cfg, "p95_window_s", 5.0) or 5.0)
     idx = 0
     t = 0.0
+    ev_i = 0
+
+    def _exec_column(rep):
+        # Exec_TID columns are independent per replica, so a resize only
+        # touches the added/removed columns — bitwise identical to a full
+        # recompute, without the O(N·P) cost per event.
+        if cost_registry is not None:
+            return cost_registry.exec_tid_matrix(
+                requests, [rep], active_params=active_params)
+        return service_time_matrix(requests, [rep],
+                                   active_params=active_params)
+
+    def _apply(e):
+        nonlocal ex_all
+        for name in e.remove:
+            i = next((j for j, r in enumerate(replicas) if r.name == name),
+                     None)
+            if i is None:
+                raise ValueError(
+                    f"resize event at t={e.t}: no replica named {name!r} "
+                    f"in {[r.name for r in replicas]}")
+            replicas.pop(i)
+            free_at.pop(i)
+            busy.pop(i)
+            ex_all = np.delete(ex_all, i, axis=1)
+        for rep in e.add:
+            if cost_registry is not None:
+                cost_registry.ensure_coverage(rep)
+            replicas.append(rep)
+            free_at.append(0.0)
+            busy.append(0.0)
+            ex_all = np.concatenate([ex_all, _exec_column(rep)], axis=1)
+        if not replicas:
+            raise ValueError(f"resize event at t={e.t} left the fleet empty")
 
     while idx < N or ready:
         t += tick
@@ -209,6 +289,31 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
             idx = j
         if not ready:
             continue
+
+        if elastic:
+            # Scripted timeline first, then the closed-loop controller.
+            # Resizes between mapping events apply lazily at the next one —
+            # commits only happen here, so the timelines are equivalent.
+            while ev_i < len(events) and events[ev_i].t <= t:
+                _apply(events[ev_i])
+                ev_i += 1
+            if controller is not None:
+                if p95_enabled:
+                    # commits arrive in time order: prune the stale prefix
+                    cut = 0
+                    while (cut < len(done_lat)
+                           and done_lat[cut][0] < t - p95_window_s):
+                        cut += 1
+                    if cut:
+                        del done_lat[:cut]
+                p95 = (float(np.percentile([l for _, l in done_lat], 95))
+                       if p95_enabled and done_lat else 0.0)
+                backlog = float(np.mean(np.maximum(
+                    np.asarray(free_at) - t, 0.0)))
+                ev = controller.observe(t, queue_depth=len(ready),
+                                        backlog_s=backlog, p95_s=p95)
+                if ev is not None:
+                    _apply(ev)
 
         ex = ex_all[ready]
         assignment = policy(ex, np.maximum(free_at, t))
@@ -234,14 +339,22 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
             free_at[p] = fin
             busy[p] += ex_rows[k][p]
             finish_all[ready[k]] = fin
+            if p95_enabled:
+                done_lat.append((t, fin - arrivals[ready[k]]))
         ready = leftovers
 
         if not committed:
             # Nothing schedulable this event.  With no arrivals left the
-            # backlog can never drain — fast-forward into the guard.  (With
-            # arrivals pending the next tick re-maps as usual.)
+            # backlog can never drain by itself — but a pending scripted
+            # resize may still make it schedulable, so jump to the next
+            # event's time instead of giving up; with nothing pending,
+            # fast-forward into the guard.  (With arrivals pending the next
+            # tick re-maps as usual.)
             if idx >= N:
-                t = guard_end
+                if ev_i < len(events):
+                    t = max(t, float(events[ev_i].t))
+                else:
+                    t = guard_end
             continue
 
     served = np.isfinite(finish_all)
@@ -252,7 +365,8 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
         return ServeResult(offered_rps=offered, achieved_rps=0.0,
                            p50_latency=np.nan, p99_latency=np.nan,
                            mean_latency=np.nan,
-                           replica_util=np.zeros(P))
+                           replica_util=np.zeros(len(replicas)),
+                           served_mask=served)
     lat = finish_all[served] - arrivals[served]
     span = np.nanmax(finish_all) - arrivals.min()
     return ServeResult(
@@ -262,6 +376,7 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
         p99_latency=float(np.percentile(lat, 99)),
         mean_latency=float(lat.mean()),
         replica_util=np.array(busy) / span,
+        served_mask=served,
     )
 
 

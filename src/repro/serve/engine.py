@@ -21,6 +21,7 @@ Two layers:
 from __future__ import annotations
 
 import contextlib
+import math
 import time
 from dataclasses import dataclass
 
@@ -30,7 +31,7 @@ import numpy as np
 
 from repro.core import heft_rt_numpy
 from repro.dist.hints import sharding_policy
-from repro.dist.sharding import MeshAxes, named, replica_pspecs
+from repro.dist.sharding import MeshAxes, named, replica_pspecs, reshard_tree
 from repro.models.config import ModelConfig
 from repro.models.model import decode_step, prefill_step
 
@@ -58,7 +59,11 @@ class ServeEngine:
     fsdp: bool = True
 
     def __post_init__(self):
-        donate = ()
+        self._build()
+
+    def _build(self):
+        """(Re)place params and (re)build the compiled steps for the current
+        mesh slice — the shared path of construction and live resharding."""
         if self.mesh is not None:
             ax = self.axes or MeshAxes()
             self.axes = ax
@@ -67,8 +72,9 @@ class ServeEngine:
             c_sh = named(self.mesh, specs["cache"])
             b_sh = named(self.mesh, specs["batch"])
             self._policy = dict(specs["policy"], __mesh__=self.mesh)
+            self._cache_sh = c_sh
             with self._ctx():
-                self.params = jax.device_put(self.params, p_sh)
+                self.params = reshard_tree(self.params, p_sh)
             self._decode = jax.jit(
                 lambda p, c, t, pos: decode_step(p, c, t, pos, self.cfg),
                 in_shardings=(p_sh, c_sh, b_sh, None),
@@ -78,10 +84,43 @@ class ServeEngine:
                 in_shardings=(p_sh, b_sh), out_shardings=(None, c_sh))
         else:
             self._policy = None
+            self._cache_sh = None
             self._decode = jax.jit(
                 lambda p, c, t, pos: decode_step(p, c, t, pos, self.cfg))
             self._prefill = jax.jit(
                 lambda p, t: prefill_step(p, t, self.cfg, max_len=self.max_len))
+
+    def reshard(self, mesh, axes: MeshAxes | None = None, caches=None):
+        """Migrate this *live* replica to a new mesh slice, in memory.
+
+        Params (and optionally a caller-held KV/state cache tree from an
+        in-flight generation) are re-laid-out under the new slice's
+        ``replica_pspecs`` via :func:`repro.dist.sharding.reshard_tree` — no
+        checkpoint/disk round-trip — and the prefill/decode executables are
+        rebuilt for the new mesh.  ``mesh=None`` migrates back to the
+        unmeshed single-device engine.  Generation is bit-identical across
+        the migration (the replica_pspecs layouts are value-preserving), so
+        a fleet controller can move replicas between slice shapes mid-run
+        without perturbing in-flight decodes.
+
+        Returns the migrated cache tree (None when ``caches`` is None).
+        """
+        self.mesh = mesh
+        if axes is not None:
+            self.axes = axes
+        if mesh is None:
+            # Actually vacate the old slice: params must not stay committed
+            # to devices the caller is about to re-carve for other replicas.
+            self.params = jax.tree.map(
+                lambda x: jnp.asarray(np.asarray(x)), self.params)
+        self._build()
+        if caches is not None:
+            if self._cache_sh is not None:
+                caches = reshard_tree(caches, self._cache_sh)
+            else:
+                caches = jax.tree.map(
+                    lambda x: jnp.asarray(np.asarray(x)), caches)
+        return caches
 
     @property
     def mesh_shape(self) -> tuple[int, ...] | None:
@@ -95,6 +134,23 @@ class ServeEngine:
         ctx.enter_context(jax.set_mesh(self.mesh))
         ctx.enter_context(sharding_policy(self._policy))
         return ctx
+
+    def start(self, prompts: np.ndarray):
+        """Prefill: (B, S0) prompts → (logits, caches).
+
+        With :meth:`step`, the resumable half of :meth:`generate` — a caller
+        can pause decoding, migrate the caches through :meth:`reshard`, and
+        resume on the new mesh slice.
+        """
+        with self._ctx():
+            return self._prefill(self.params, jnp.asarray(prompts))
+
+    def step(self, caches, tok, pos: int):
+        """One decode step: (caches, (B, 1) tokens, position) → (logits,
+        caches).  The cache tree is donated (pass the latest one)."""
+        with self._ctx():
+            return self._decode(self.params, caches, jnp.asarray(tok),
+                                jnp.int32(pos))
 
     def generate(self, prompts: np.ndarray, new_tokens: int,
                  greedy: bool = True, seed: int = 0):
@@ -143,6 +199,25 @@ class ReplicaHandle:
         if self.mesh_shape is None:
             self.mesh_shape = self.engine.mesh_shape
 
+    def sync_mesh_identity(self) -> None:
+        """Re-derive the scheduling identity after ``engine.reshard``.
+
+        The cost-model key follows the engine's new slice, and ``speed`` /
+        aggregate rates rescale with the device count — without this, the
+        front end keeps scheduling the migrated replica with the *old*
+        slice's Exec_TID column.
+        """
+        old_n = math.prod(self.mesh_shape) if self.mesh_shape else 1
+        self.mesh_shape = self.engine.mesh_shape
+        new_n = math.prod(self.mesh_shape) if self.mesh_shape else 1
+        if new_n != old_n:
+            scale = new_n / old_n
+            self.speed *= scale
+            if self.compute_tflops:
+                self.compute_tflops *= scale
+            if self.hbm_gbps:
+                self.hbm_gbps *= scale
+
 
 @dataclass
 class HeftFrontEnd:
@@ -167,6 +242,32 @@ class HeftFrontEnd:
     replicas: list[ReplicaHandle]
     fabric: object | None = None      # MappingFabric, optional
     cost_registry: object | None = None
+
+    # -- dynamic handle registry (elastic fleet) ----------------------------
+
+    def add_replica(self, handle: ReplicaHandle) -> None:
+        """Join a replica mid-run.  With a fabric attached, the PE pool grows
+        in place so the compiled dispatch keeps matching the fleet width.
+        The resident registers are seeded at the joiner's ``avail_at`` for
+        resident-register consumers; ``schedule()`` itself passes the
+        handles' availability explicitly every event."""
+        self.replicas.append(handle)
+        if self.fabric is not None:
+            self.fabric.grow(len(self.replicas), avail=handle.avail_at)
+
+    def remove_replica(self, name: str) -> ReplicaHandle:
+        """Retire a replica by name (in-flight work finishes; no new
+        assignments).  The fabric shrinks keeping the survivors' registers."""
+        idx = next((i for i, r in enumerate(self.replicas) if r.name == name),
+                   None)
+        if idx is None:
+            raise KeyError(f"no replica named {name!r} in "
+                           f"{[r.name for r in self.replicas]}")
+        handle = self.replicas.pop(idx)
+        if self.fabric is not None:
+            self.fabric.shrink([i for i in range(len(self.replicas) + 1)
+                                if i != idx])
+        return handle
 
     def estimate_s(self, prompt_len: int, new_tokens: int,
                    replica: ReplicaHandle) -> float:
@@ -221,20 +322,21 @@ def mesh_backed_fleet(cfg: ModelConfig, params: dict, mesh_shapes,
                       *, max_len: int = 128, arch: str | None = None,
                       axes: MeshAxes | None = None, devices=None,
                       chip_tflops: float = 1.0, chip_hbm_gbps: float = 1.0,
-                      ici_gbps: float = 0.0) -> list[ReplicaHandle]:
+                      ici_gbps: float = 0.0, return_spare: bool = False):
     """Carve the device pool into mesh slices and build one engine each.
 
     The heterogeneous serve fleet in one call: ``mesh_shapes`` like
     ``[(1, 1), (2, 1), (2, 2)]`` produce replicas of mixed parallelism whose
     aggregate rates (and HEFT_RT speed fallback) scale with slice size.
+    ``return_spare=True`` additionally returns the pool's uncarved devices
+    (``slice_device_pool``'s remainder) — the spare budget elastic resize
+    events re-carve later.
     """
-    import math
-
     from repro.launch.mesh import slice_device_pool
 
     ax = axes or MeshAxes()
-    meshes = slice_device_pool(mesh_shapes, (ax.data, ax.model),
-                               devices=devices)
+    meshes, spare = slice_device_pool(mesh_shapes, (ax.data, ax.model),
+                                      devices=devices, return_remainder=True)
     fleet = []
     for i, mesh in enumerate(meshes):
         shape = tuple(mesh.devices.shape)
@@ -245,4 +347,6 @@ def mesh_backed_fleet(cfg: ModelConfig, params: dict, mesh_shapes,
             speed=float(n), arch=arch or cfg.name,
             compute_tflops=n * chip_tflops, hbm_gbps=n * chip_hbm_gbps,
             ici_gbps=ici_gbps))
+    if return_spare:
+        return fleet, spare
     return fleet

@@ -34,7 +34,7 @@ from repro.dist.compression import (
     reshard_residual,
 )
 from repro.dist.hints import sharding_policy
-from repro.dist.sharding import MeshAxes, activation_hint_policy
+from repro.dist.sharding import MeshAxes, activation_hint_policy, reshard_tree
 from repro.models.config import ModelConfig, ShapeConfig
 from repro.models.model import init_params, loss_fn
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
@@ -321,7 +321,7 @@ class Trainer:
         # elastic pod-count change: rebuild the stack (Σe/n preserved) and
         # place each leaf on the new mesh
         res = reshard_residual(state["residual"], self.num_pods)
-        res = jax.tree.map(jax.device_put, res, self._residual_shardings(res))
+        res = reshard_tree(res, self._residual_shardings(res))
         return state["params"], state["opt"], res, latest
 
     def save(self, step: int, params, opt_state, residual) -> None:

@@ -1,0 +1,535 @@
+"""Elastic fleet: variable-P fabric, live replica re-sharding, resize events.
+
+Covers the tentpole claims:
+
+* a ``MappingFabric`` after any grow/shrink/remap sequence carries committed
+  ``T_avail`` bit-exact, and dispatches exactly like a fresh fixed-P fabric
+  holding the surviving registers (property-tested, every backend via the CI
+  matrix),
+* a scripted grow/shrink with PEs that never took work is bit-identical to a
+  fixed-P fabric replaying the same surviving events,
+* ``simulate_serving(fleet_events=[])`` is bit-identical to the fixed-fleet
+  simulator; a scripted grow under a load spike strictly improves latency,
+* the closed-loop ``FleetController`` grows on backlog and merges back after
+  the spike drains, tracing its decisions,
+* ``ServeEngine.reshard`` migrates a live replica (params + mid-generation
+  KV caches) across mesh slices with token-for-token identical output
+  (subprocess, (1,1)→(2,2)→(2,1)),
+* ``reshard_tree`` / ``slice_device_pool`` remainder contracts.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from _subproc import run_sub as _run_sub
+
+from repro.core import heft_rt_numpy
+from repro.sched_integration import (
+    CostCell,
+    CostModelRegistry,
+    FleetController,
+    FleetControllerConfig,
+    MappingFabric,
+    POLICIES,
+    ResizeEvent,
+    default_fleet,
+    grown_replica_factory,
+    make_requests,
+    make_spike_requests,
+    merge_event,
+    mesh_fleet,
+    simulate_serving,
+    split_event,
+)
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# variable-P fabric: resize sequences vs fresh fixed-P replay
+# ---------------------------------------------------------------------------
+
+def _event(rng, n, p):
+    """f32-exact integer grid draws (the device backends' fidelity domain)."""
+    avg = rng.integers(0, 5, n).astype(np.float32)
+    ex = rng.integers(1, 16, (n, p)).astype(np.float32)
+    ex[rng.random(n) < 0.1] = np.inf
+    return avg, ex
+
+
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(2, 10))
+def test_fabric_resize_sequence_matches_host_mirror(seed, steps):
+    """Random interleavings of mapping events and grow/shrink/remap: the
+    resident registers track a host-side mirror bit-exact at every step, and
+    the final fabric dispatches exactly like a fresh fixed-P fabric seeded
+    with the surviving registers (default backend — the CI matrix runs this
+    under REPRO_FABRIC_BACKEND=pallas/jit too)."""
+    rng = np.random.default_rng(seed)
+    fab = MappingFabric(int(rng.integers(1, 6)), backend="auto")
+    mirror = np.zeros(fab.num_pes)
+    for _ in range(steps):
+        op = rng.integers(0, 4)
+        if op == 0:                                   # mapping event
+            avg, ex = _event(rng, int(rng.integers(1, 12)), fab.num_pes)
+            fab.map_event(avg, ex)                    # resident, donated
+            mirror = heft_rt_numpy(avg, ex, mirror)[4]
+        elif op == 1:                                 # grow
+            k = int(rng.integers(1, 4))
+            fab.grow(fab.num_pes + k)
+            mirror = np.concatenate([mirror, np.zeros(k)])
+        elif op == 2 and fab.num_pes > 1:             # shrink
+            keep = np.sort(rng.choice(
+                fab.num_pes, int(rng.integers(1, fab.num_pes)),
+                replace=False))
+            fab.shrink(keep)
+            mirror = mirror[keep]
+        elif op == 3:                                 # remap
+            perm = rng.permutation(fab.num_pes)
+            fab.remap(perm)
+            new = np.empty(fab.num_pes)
+            new[perm] = mirror
+            mirror = new
+        np.testing.assert_array_equal(fab.avail, mirror)
+
+    fresh = MappingFabric(fab.num_pes, backend="auto", avail=mirror)
+    avg, ex = _event(rng, 8, fab.num_pes)
+    got = fab.map_event(avg, ex, update=False)
+    want = fresh.map_event(avg, ex, update=False)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+def test_fabric_grow_shrink_equals_fixed_p_replaying_surviving_events():
+    """PEs that joined and left without ever taking work (all-inf exec
+    columns) leave no trace: the grown-then-shrunk fabric ends bit-identical
+    to a fixed-P fabric replaying the same events without those columns."""
+    rng = np.random.default_rng(5)
+    P = 3
+    fab = MappingFabric(P, backend="jit")
+    fixed = MappingFabric(P, backend="jit")
+    events = [_event(rng, 6, P) for _ in range(4)]
+
+    fab.map_event(*events[0])                         # event 0 at base P
+    fixed.map_event(*events[0])
+    fab.grow(P + 2)                                   # two transient PEs
+    for avg, ex in events[1:3]:
+        ex_wide = np.concatenate(
+            [ex, np.full((ex.shape[0], 2), np.inf, np.float32)], axis=1)
+        fab.map_event(avg, ex_wide)                   # they never win a task
+        fixed.map_event(avg, ex)
+    fab.shrink(np.arange(P))                          # transients leave
+    fab.map_event(*events[3])
+    fixed.map_event(*events[3])
+    np.testing.assert_array_equal(fab.avail, fixed.avail)
+    assert fab.resizes == 2 and fixed.resizes == 0
+
+
+def test_fabric_resize_validation():
+    fab = MappingFabric(4, backend="numpy")
+    with pytest.raises(ValueError, match="grow target"):
+        fab.grow(2)
+    with pytest.raises(ValueError, match="duplicates"):
+        fab.shrink([0, 0, 1])
+    with pytest.raises(ValueError, match="out of range"):
+        fab.shrink([0, 7])
+    with pytest.raises(ValueError, match="permutation"):
+        fab.remap([0, 1, 1, 2])
+    with pytest.raises(ValueError, match="num_pes"):
+        fab.map_event(np.ones(3), np.ones((3, 5)))
+
+
+def test_fabric_resize_stays_in_compiled_bucket():
+    """Grows inside one P bucket reuse the compiled dispatch: the event fn
+    object is stable and p_bucket doesn't move until the bucket is crossed."""
+    fab = MappingFabric(3, backend="jit", min_pe_bucket=4)
+    fn0 = fab._event_fn()
+    assert fab.p_bucket == 4
+    fab.map_event(*_event(np.random.default_rng(0), 5, 3))
+    fab.grow(4)
+    assert fab.p_bucket == 4 and fab._event_fn() is fn0
+    fab.map_event(*_event(np.random.default_rng(1), 5, 4))
+    fab.grow(5)
+    assert fab.p_bucket == 8 and fab._event_fn() is fn0
+    fab.shrink([0, 1])
+    assert fab.p_bucket == 4
+
+
+def test_policy_fabric_survives_fleet_resize():
+    """make_policy_fabric resizes its live fabric on a P change instead of
+    rebuilding it (decisions stay oracle-identical at both widths)."""
+    from repro.sched_integration import make_policy_fabric
+    from repro.sched_integration.serve_scheduler import policy_heft_rt
+
+    rng = np.random.default_rng(2)
+    pol = make_policy_fabric()
+    for p in (3, 5, 2):
+        ex = rng.integers(1, 16, (10, p)).astype(np.float64) / 8.0
+        avail = rng.integers(0, 8, p).astype(np.float64) / 8.0
+        np.testing.assert_array_equal(pol(ex, avail),
+                                      policy_heft_rt(ex, avail))
+
+
+# ---------------------------------------------------------------------------
+# simulate_serving: fleet-event timeline
+# ---------------------------------------------------------------------------
+
+def test_empty_fleet_events_bit_identical_to_fixed_fleet():
+    fleet = default_fleet()
+    reqs = make_requests(rate_rps=600, duration_s=1.0, seed=0)
+    a = simulate_serving(fleet, reqs, POLICIES["heft_rt"](),
+                         active_params=7e9)
+    b = simulate_serving(fleet, reqs, POLICIES["heft_rt"](),
+                         active_params=7e9, fleet_events=[])
+    assert a.mean_latency == b.mean_latency
+    assert a.p50_latency == b.p50_latency
+    assert a.p99_latency == b.p99_latency
+    assert a.achieved_rps == b.achieved_rps
+    np.testing.assert_array_equal(a.replica_util, b.replica_util)
+    np.testing.assert_array_equal(a.served_mask, b.served_mask)
+
+
+def test_grow_event_improves_spike_latency():
+    base = mesh_fleet("a", ((4, 4), (4, 4)))
+    reqs = make_spike_requests(2.0, 30.0, spike_start=1.0, spike_end=2.0,
+                               duration_s=8.0, seed=1)
+    static = simulate_serving(base, reqs, POLICIES["heft_rt"](),
+                              active_params=7e9)
+    grow = ResizeEvent(1.2, add=tuple(mesh_fleet("a", ((4, 4),))))
+    elastic = simulate_serving(base, reqs, POLICIES["heft_rt"](),
+                               active_params=7e9, fleet_events=[grow])
+    assert elastic.served_mask.sum() >= static.served_mask.sum()
+    assert elastic.p99_latency < static.p99_latency
+
+
+def test_remove_event_is_drain_then_leave():
+    """Removing a replica mid-run never un-serves committed work, and the
+    survivors absorb the rest."""
+    fleet = mesh_fleet("a", ((4, 4), (4, 4)))
+    reqs = make_requests(rate_rps=3.0, duration_s=4.0, seed=3)
+    ev = [ResizeEvent(1.0, remove=(fleet[1].name,))]
+    r = simulate_serving(fleet, reqs, POLICIES["heft_rt"](),
+                         active_params=7e9, fleet_events=ev)
+    assert r.served_mask.all()
+    assert r.replica_util.shape == (1,)    # final roster: one survivor
+
+
+def test_fleet_events_reject_exec_matrix_and_unknown_names():
+    fleet = default_fleet()
+    reqs = make_requests(rate_rps=100, duration_s=0.5, seed=4)
+    ex = np.ones((len(reqs), len(fleet)))
+    with pytest.raises(ValueError, match="exec_matrix"):
+        simulate_serving(fleet, reqs, POLICIES["heft_rt"](),
+                         active_params=7e9, exec_matrix=ex,
+                         fleet_events=[ResizeEvent(0.1)])
+    with pytest.raises(ValueError, match="no replica named"):
+        simulate_serving(fleet, reqs, POLICIES["heft_rt"](),
+                         active_params=7e9,
+                         fleet_events=[ResizeEvent(0.0, remove=("nope",))])
+
+
+def test_split_merge_events_balance_devices():
+    fleet = mesh_fleet("a", ((2, 2), (4, 4)))
+    with pytest.raises(ValueError, match="devices"):
+        split_event(0.5, fleet[0], [(1, 1)])
+    with pytest.raises(ValueError, match="devices"):
+        merge_event(0.5, fleet, (2, 2))
+    se = split_event(0.5, fleet[1], [(2, 4), (2, 4)])
+    assert se.remove == (fleet[1].name,) and len(se.add) == 2
+    assert all(r.compute_tflops == fleet[1].compute_tflops / 2
+               for r in se.add)
+    me = merge_event(2.0, se.add, (4, 4))
+    assert me.add[0].compute_tflops == fleet[1].compute_tflops
+    reqs = make_requests(rate_rps=4.0, duration_s=4.0, seed=5)
+    r = simulate_serving(fleet, reqs, POLICIES["heft_rt"](),
+                         active_params=7e9, fleet_events=[se, me])
+    assert r.served_mask.all()
+
+
+def test_fleet_event_joiner_gets_scaled_cost_cells():
+    """A replica added with a never-dry-run shape is covered by projecting
+    the arch's measured cell (ensure_coverage → scaled_cell) mid-run."""
+    reg = CostModelRegistry([
+        CostCell("a", "prefill", (4, 4), tokens_per_step=1024,
+                 flops_per_device=1e12, bytes_per_device=1e9),
+        CostCell("a", "decode", (4, 4), tokens_per_step=16,
+                 flops_per_device=1e8, bytes_per_device=2e9),
+    ])
+    fleet = mesh_fleet("a", ((4, 4), (4, 4)))
+    joiner = mesh_fleet("a", ((2, 2),))[0]
+    assert reg.covers(fleet[0]) and not reg.covers(joiner)
+    reqs = make_requests(rate_rps=6.0, duration_s=3.0, seed=6)
+    simulate_serving(fleet, reqs, POLICIES["heft_rt"](), active_params=7e9,
+                     cost_registry=reg,
+                     fleet_events=[ResizeEvent(0.5, add=(joiner,))])
+    assert reg.covers(joiner)
+    # the projection anchored on the measured (4, 4) cell
+    cp = reg.cell("a", "prefill", (2, 2))
+    assert cp.flops_per_token == pytest.approx(
+        reg.cell("a", "prefill", (4, 4)).flops_per_token * 0.9)
+
+
+def test_ensure_coverage_anchors_on_measured_cells_join_order_free():
+    """Projected cells never anchor further projections: the discount is
+    applied once from the measured cell, whatever order joiners arrive."""
+    def fresh():
+        return CostModelRegistry([
+            CostCell("a", "prefill", (1, 1), tokens_per_step=16,
+                     flops_per_device=1e12, bytes_per_device=1e9),
+            CostCell("a", "decode", (1, 1), tokens_per_step=1,
+                     flops_per_device=1e8, bytes_per_device=2e9),
+        ])
+
+    small = mesh_fleet("a", ((2, 2),))[0]
+    big = mesh_fleet("a", ((4, 4),))[0]
+    r1, r2 = fresh(), fresh()
+    assert r1.ensure_coverage(small) and r1.ensure_coverage(big)
+    assert r2.ensure_coverage(big) and r2.ensure_coverage(small)
+    for kind in ("prefill", "decode"):
+        c1 = r1.cell("a", kind, (4, 4))
+        c2 = r2.cell("a", kind, (4, 4))
+        assert c1.projected and c1 == c2          # order-independent
+        measured = r1.cell("a", kind, (1, 1))
+        assert not measured.projected
+        # single 1/0.9 discount from the measured anchor, never compounded
+        assert c1.flops_per_token == pytest.approx(
+            measured.flops_per_token / 0.9)
+
+
+def test_make_requests_rejects_non_positive_rate():
+    with pytest.raises(ValueError, match="positive"):
+        make_requests(lambda t: 0.0 if t < 1 else 10.0, 5.0, seed=0)
+
+
+def test_merge_event_rejects_mixed_chip_generations():
+    fast = mesh_fleet("a", ((2, 2),), chip_tflops=200.0)[0]
+    slow = mesh_fleet("a", ((2, 2),), chip_tflops=100.0)[0]
+    with pytest.raises(ValueError, match="mixed"):
+        merge_event(0.0, [fast, slow], (2, 4))
+
+
+def test_ensure_coverage_atomic_when_kind_missing():
+    reg = CostModelRegistry([
+        CostCell("a", "prefill", (4, 4), tokens_per_step=1024,
+                 flops_per_device=1e12, bytes_per_device=1e9),
+    ])   # no decode cell for the arch at all
+    joiner = mesh_fleet("a", ((2, 2),))[0]
+    assert not reg.ensure_coverage(joiner)
+    assert reg.cell("a", "prefill", (2, 2)) is None   # nothing half-registered
+
+
+# ---------------------------------------------------------------------------
+# closed-loop controller
+# ---------------------------------------------------------------------------
+
+def test_controller_grows_on_spike_and_merges_back():
+    base = mesh_fleet("a", ((4, 4), (4, 4)))
+    reqs = make_spike_requests(2.0, 30.0, spike_start=1.0, spike_end=2.0,
+                               duration_s=8.0, seed=1)
+    ctl = FleetController(
+        FleetControllerConfig(grow_backlog_s=1.0, shrink_backlog_s=0.3,
+                              cooldown_s=0.5, max_grown=3),
+        grown_replica_factory("a", (4, 4)))
+    elastic = simulate_serving(base, reqs, POLICIES["heft_rt"](),
+                               active_params=7e9, controller=ctl)
+    static = simulate_serving(base, reqs, POLICIES["heft_rt"](),
+                              active_params=7e9)
+    kinds = [k for _, k, _ in ctl.trace]
+    assert "grow" in kinds and "shrink" in kinds
+    assert elastic.p99_latency < static.p99_latency
+    # every grow happened during/after the spike built backlog
+    first_grow = next(t for t, k, _ in ctl.trace if k == "grow")
+    assert first_grow >= 1.0
+    # shrinks only retire controller-grown replicas, never the base fleet
+    assert ctl.grown == [] or all(n.endswith(f"+g{i}") for i, n in
+                                  enumerate(ctl.grown))
+
+
+def test_controller_p95_signal_windows_and_does_not_oscillate():
+    """grow_p95_s drives the loop through the *windowed* p95: the spike
+    trips it, the window forgets the spike after the drain, and the
+    grow/shrink phases stay monotone (a cumulative p95 would latch
+    overloaded and oscillate grow/shrink forever)."""
+    base = mesh_fleet("a", ((4, 4), (4, 4)))
+    reqs = make_spike_requests(2.0, 30.0, spike_start=1.0, spike_end=2.0,
+                               duration_s=10.0, seed=1)
+    ctl = FleetController(
+        FleetControllerConfig(grow_backlog_s=float("inf"), grow_p95_s=1.5,
+                              p95_window_s=3.0, shrink_backlog_s=0.3,
+                              cooldown_s=0.5, max_grown=2),
+        grown_replica_factory("a", (4, 4)))
+    simulate_serving(base, reqs, POLICIES["heft_rt"](), active_params=7e9,
+                     controller=ctl)
+    kinds = [k for _, k, _ in ctl.trace]
+    assert "grow" in kinds and "shrink" in kinds
+    # monotone phases: once shrinking starts, no further grow (no oscillation)
+    first_shrink = kinds.index("shrink")
+    assert all(k == "shrink" for k in kinds[first_shrink:])
+    assert ctl.grown == []
+
+
+def test_pending_grow_event_rescues_dead_backlog():
+    """Requests no live replica can serve (zero-rate fleet → +inf roofline)
+    wait for a *future* scripted joiner instead of being dropped when the
+    arrival stream ends before the event fires."""
+    from repro.sched_integration import Replica
+
+    dead = [Replica("dead", 0.0, 0.0)]
+    reqs = make_requests(rate_rps=20.0, duration_s=0.3, seed=7)
+    unserved = simulate_serving(dead, reqs, POLICIES["heft_rt"](),
+                                active_params=7e9)
+    assert not unserved.served_mask.any()
+    live = mesh_fleet("a", ((4, 4),))[0]
+    served = simulate_serving(dead, reqs, POLICIES["heft_rt"](),
+                              active_params=7e9,
+                              fleet_events=[ResizeEvent(2.0, add=(live,))])
+    assert served.served_mask.all()
+
+
+def test_split_merge_reject_non_mesh_replicas():
+    from repro.sched_integration import Replica
+
+    abstract = Replica("abstract", 1.0, 1.0)
+    with pytest.raises(ValueError, match="mesh-backed"):
+        split_event(0.0, abstract, [(1, 1)])
+    with pytest.raises(ValueError, match="mesh-backed"):
+        merge_event(0.0, [mesh_fleet("a", ((1, 1),))[0], abstract], (2, 1))
+
+
+def test_controller_cooldown_and_budget():
+    ctl = FleetController(
+        FleetControllerConfig(grow_backlog_s=1.0, cooldown_s=1.0,
+                              max_grown=1),
+        grown_replica_factory("a", (2, 2)))
+    ev = ctl.observe(0.0, backlog_s=5.0)
+    assert ev is not None and len(ev.add) == 1
+    assert ctl.observe(0.5, backlog_s=5.0) is None       # cooling down
+    assert ctl.observe(2.0, backlog_s=5.0) is None       # budget exhausted
+    ev = ctl.observe(4.0, backlog_s=0.0, queue_depth=0)  # drained → shrink
+    assert ev is not None and ev.remove
+    assert ctl.observe(9.0, backlog_s=0.0) is None       # nothing grown left
+
+
+# ---------------------------------------------------------------------------
+# live engines: reshard + dynamic front-end registry
+# ---------------------------------------------------------------------------
+
+def test_engine_reshard_bit_identical_across_slices():
+    """(1,1)→(2,2)→(2,1) migration of a live engine: same tokens out at
+    every stop, params really move, and a mid-generation KV cache migrates
+    through reshard(caches=...) without perturbing the continuation."""
+    out = _run_sub("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.configs import get_smoke_config
+        from repro.launch.mesh import make_debug_mesh
+        from repro.models.model import init_params
+        from repro.serve import ServeEngine
+
+        cfg = get_smoke_config('deepseek-7b')
+        params = init_params(jax.random.key(0), cfg)
+        pool = jax.devices()
+        m11 = make_debug_mesh((1, 1), devices=pool[:1])
+        m22 = make_debug_mesh((2, 2), devices=pool[:4])
+        m21 = make_debug_mesh((2, 1), devices=pool[4:6])
+
+        eng = ServeEngine(cfg, params, max_len=64, mesh=m11)
+        rng = np.random.default_rng(0)
+        prompt = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+        want = eng.generate(prompt[None, :], 8)
+        for mesh, nd in ((m22, 4), (m21, 2)):
+            eng.reshard(mesh)
+            assert eng.mesh_shape == tuple(mesh.devices.shape)
+            got = eng.generate(prompt[None, :], 8)
+            assert np.array_equal(got, want), mesh
+            leaf = jax.tree.leaves(eng.params)[0]
+            assert len(leaf.sharding.device_set) == nd, leaf.sharding
+
+        # mid-generation migration: 4 tokens on (2,1), move the caches to
+        # (2,2), 4 more — equals the uninterrupted run token-for-token
+        logits, caches = eng.start(prompt[None, :])
+        toks, pos = [], prompt.shape[0]
+        for i in range(8):
+            if i == 4:
+                caches = eng.reshard(m22, caches=caches)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            toks.append(np.asarray(tok))
+            logits, caches = eng.step(caches, tok[:, None], pos + i)
+        got = np.concatenate([t[:, None] for t in toks], axis=1)
+        assert np.array_equal(got, want[:, 12:]), (got, want[:, 12:])
+
+        eng.reshard(None)       # back to the unmeshed single-device engine
+        assert eng.mesh_shape is None
+        # the old slice is actually vacated (its devices can be re-carved)
+        leaf = jax.tree.leaves(eng.params)[0]
+        assert len(leaf.sharding.device_set) == 1, leaf.sharding
+        assert np.array_equal(eng.generate(prompt[None, :], 8), want)
+        print('OK')
+    """)
+    assert "OK" in out
+
+
+def test_front_end_dynamic_registry_resizes_fabric():
+    from repro.serve.engine import HeftFrontEnd, ReplicaHandle
+
+    class _Eng:
+        mesh_shape = None
+
+    front = HeftFrontEnd([ReplicaHandle("a", _Eng()),
+                          ReplicaHandle("b", _Eng(), speed=2.0)],
+                         fabric=MappingFabric(2, backend="numpy"))
+    reqs = [(np.zeros(10, np.int32), 4), (np.zeros(6, np.int32), 2)]
+    front.schedule(reqs)
+    front.add_replica(ReplicaHandle("c", _Eng(), speed=4.0,
+                                    avail_at=0.125))
+    assert front.fabric.num_pes == 3
+    assert front.fabric.avail[2] == 0.125     # joiner's register seeded
+    plan = front.schedule(reqs)
+    assert all(0 <= p < 3 for _, p in plan)
+    removed = front.remove_replica("a")
+    assert removed.name == "a" and front.fabric.num_pes == 2
+    plan = front.schedule(reqs)
+    assert all(0 <= p < 2 for _, p in plan)
+    with pytest.raises(KeyError):
+        front.remove_replica("a")
+
+
+# ---------------------------------------------------------------------------
+# reshard_tree + slice_device_pool contracts
+# ---------------------------------------------------------------------------
+
+def test_reshard_tree_identity_and_placement():
+    import jax
+    from repro.dist import reshard_tree
+
+    tree = {"w": np.arange(6.0).reshape(2, 3), "b": np.ones(3)}
+    same = reshard_tree(tree, {"w": None, "b": None})
+    assert same["w"] is tree["w"] and same["b"] is tree["b"]
+
+    dev = jax.devices()[0]
+    sh = jax.sharding.SingleDeviceSharding(dev)
+    placed = reshard_tree(tree, {"w": sh, "b": None})
+    np.testing.assert_array_equal(np.asarray(placed["w"]), tree["w"])
+    assert placed["w"].sharding == sh and placed["b"] is tree["b"]
+    # old == new placements are skipped (no fresh transfer)
+    again = reshard_tree(placed, {"w": sh, "b": None},
+                         old_shardings={"w": sh, "b": None})
+    assert again["w"] is placed["w"]
+
+
+def test_slice_device_pool_remainder_contract():
+    import jax
+    from repro.launch.mesh import slice_device_pool
+
+    pool = list(jax.devices())
+    meshes, rem = slice_device_pool([(1, 1)], devices=pool,
+                                    return_remainder=True)
+    assert len(meshes) == 1 and rem == pool[1:]
+    with pytest.raises(ValueError, match="oversubscribed"):
+        slice_device_pool([(len(pool) + 1, 1)], devices=pool)
+    if len(pool) == 1:
+        # exact tiling satisfies the strict contract
+        slice_device_pool([(1, 1)], devices=pool, allow_remainder=False)
+        with pytest.raises(ValueError, match="unused"):
+            slice_device_pool([], devices=pool, allow_remainder=False)
