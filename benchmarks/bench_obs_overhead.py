@@ -1,0 +1,94 @@
+"""Observability overhead: instrumentation must be (near-)free.
+
+The tentpole claim of ``repro.obs`` is that the instrumented scheduler is
+the production scheduler — the paper's hardware counters update in the same
+cycle as the decision, and our software analogue has to stay cheap enough
+that nobody is tempted to benchmark with it off.  Measured here:
+
+  * ``MappingFabric.map_event`` (numpy and jit backends), bare vs fully
+    instrumented (tracer + metrics + device counters),
+  * the primitive costs: disabled-tracer span, enabled span, histogram
+    record — per-op nanoseconds.
+
+The time-like rows are CI-gated (``--check`` against the tracked
+``BENCH_obs_overhead.json``): an instrumentation-cost regression fails the
+build just like a scheduler-latency regression.
+"""
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import time_call
+from repro.obs import Histogram, MetricsRegistry, Tracer
+from repro.sched_integration import MappingFabric
+
+D, P = 64, 8
+EVENTS = 32
+
+
+def _events(rng):
+    avg = rng.integers(0, 6, (EVENTS, D)).astype(np.float32)
+    ex = rng.integers(1, 16, (EVENTS, D, P)).astype(np.float32)
+    avail = rng.integers(0, 8, P).astype(np.float32)
+    return avg, ex, avail
+
+
+def _fabric_us(backend, instrumented, avg, ex, avail):
+    kw = (dict(tracer=Tracer(), metrics=MetricsRegistry(),
+               device_counters=True) if instrumented else {})
+    fab = MappingFabric(P, backend=backend, **kw)
+
+    def events():
+        for i in range(EVENTS):
+            out = fab.map_event(avg[i], ex[i], avail, update=False)
+        if backend != "numpy":
+            jax.block_until_ready(out[1])
+
+    us = time_call(events, repeats=5, warmup=2)
+    return us / EVENTS
+
+
+def run():
+    rng = np.random.default_rng(0)
+    avg, ex, avail = _events(rng)
+    rows = []
+    for backend in ("numpy", "jit"):
+        off = _fabric_us(backend, False, avg, ex, avail)
+        on = _fabric_us(backend, True, avg, ex, avail)
+        rows.append((f"obs_fabric_{backend}_off", off, f"D={D};P={P}"))
+        rows.append((f"obs_fabric_{backend}_on", on,
+                     f"tracer+metrics+device_counters;D={D};P={P}"))
+        rows.append((f"obs_fabric_{backend}_overhead", on / off, "x",
+                     "instrumented/bare map_event; acceptance: near 1"))
+
+    # primitive costs, per-op ns (batched loops so the clock resolves them)
+    N = 10_000
+    null = Tracer(capacity=4, enabled=False)
+    live = Tracer(capacity=1 << 16)
+    hist = Histogram()
+
+    def disabled_spans():
+        for _ in range(N):
+            with null.span("x"):
+                pass
+
+    def enabled_completes():
+        for _ in range(N):
+            live.complete("x", 0.0, 1e-6)
+
+    def hist_records():
+        for _ in range(N):
+            hist.record(1e-6)
+
+    for name, fn in (("obs_span_disabled", disabled_spans),
+                     ("obs_complete_enabled", enabled_completes),
+                     ("obs_hist_record", hist_records)):
+        us = time_call(fn, repeats=5, warmup=1)
+        rows.append((name, us / N * 1e3, "ns", f"per-op;batch={N}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

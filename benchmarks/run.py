@@ -18,6 +18,7 @@ unit per row).
   bench_expert_placement         beyond-paper: MoE expert rebalancing
   bench_energy                   paper future-work: energy-aware HEFT_RT
   bench_roofline                 deliverable (g): per-cell roofline terms
+  bench_obs_overhead             beyond-paper: repro.obs instrumentation cost
 
 ``--json`` additionally writes one ``BENCH_<module>.json`` artifact per
 module (``--outdir DIR``, default ``benchmarks/artifacts``) —
@@ -65,6 +66,7 @@ MODULES = [
     "bench_expert_placement",
     "bench_energy",
     "bench_roofline",
+    "bench_obs_overhead",
 ]
 
 DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "artifacts")

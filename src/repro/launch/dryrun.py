@@ -52,7 +52,10 @@ from repro.launch.specs import (                               # noqa: E402
 )
 from repro.models.config import SHAPES                         # noqa: E402
 from repro.models.model import param_specs as model_param_specs  # noqa: E402
+from repro.obs import get_logger                               # noqa: E402
 from repro.optim.adamw import init_opt_state                   # noqa: E402
+
+log = get_logger("dryrun")
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
                             "..", "..", "..", "experiments", "artifacts", "dryrun")
@@ -163,13 +166,14 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
     }
     if verbose:
         weighted, mem_info = summary["weighted"], summary["memory"]
-        print(f"[dryrun] {arch} × {shape_name} × {out['mesh']}: "
-              f"compile OK ({t_compile:.1f}s) "
-              f"wflops/dev={weighted['dot_flops_per_device']:.3e} "
-              f"argbytes/dev={mem_info.get('argument_size_in_bytes')} "
-              f"temp/dev={mem_info.get('temp_size_in_bytes')} "
-              f"wwire/dev={weighted['total_wire_bytes_per_device']:.3e}")
-        print(compiled.memory_analysis())
+        log.info(f"{arch} × {shape_name} × {out['mesh']}: "
+                 f"compile OK ({t_compile:.1f}s) "
+                 f"wflops/dev={weighted['dot_flops_per_device']:.3e} "
+                 f"argbytes/dev={mem_info.get('argument_size_in_bytes')} "
+                 f"temp/dev={mem_info.get('temp_size_in_bytes')} "
+                 f"wwire/dev={weighted['total_wire_bytes_per_device']:.3e}")
+        # per-cell memory analyses are diagnostics: REPRO_LOG=debug only
+        log.debug("%s", compiled.memory_analysis())
     return out
 
 
@@ -202,7 +206,7 @@ def run_all(archs=None, shapes=None, meshes=("single", "multi"),
                            "mesh": "2x16x16" if multi else "16x16",
                            "error": f"{type(e).__name__}: {e}",
                            "traceback": traceback.format_exc()[-2000:]}
-                    print(f"[dryrun] FAILED {arch} × {shape_name} × {mesh_kind}: {e}")
+                    log.error(f"FAILED {arch} × {shape_name} × {mesh_kind}: {e}")
                 with open(path, "w") as f:
                     json.dump(res, f, indent=1)
                 results.append(res)

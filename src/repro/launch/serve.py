@@ -2,6 +2,7 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --requests 12
   PYTHONPATH=src python -m repro.launch.serve --sharded    # mesh-backed fleet
+  PYTHONPATH=src python -m repro.launch.serve --trace /tmp/serve_trace.json
 
 Default mode builds a small heterogeneous "fleet" of replicas of a
 smoke-config model (speed factors emulate mixed pods).  ``--sharded`` carves
@@ -15,19 +16,30 @@ after the first batch, replica 0 migrates *live* onto a new slice carved
 from the pool's leftover devices (``ServeEngine.reshard`` — params move in
 memory, no checkpoint), then serves the same requests again; outputs are
 verified token-identical across the migration.
+
+``--trace OUT.json`` turns on the full observability stack — a
+``repro.obs`` Tracer + MetricsRegistry attached to the front end and every
+engine, with the HEFT_RT mapping routed through an instrumented
+``MappingFabric`` (decision spans, per-decision latency histogram,
+device-resident scheduler counters) — and exports a Perfetto-loadable
+Chrome trace with the metrics snapshot embedded.  Output verbosity is the
+``REPRO_LOG`` env knob (debug/info/warning/error/silent).
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models.model import init_params
+from repro.obs import MetricsRegistry, Tracer, get_logger
+from repro.obs.metrics import time_s
 from repro.serve import HeftFrontEnd, ReplicaHandle, ServeEngine, mesh_backed_fleet
+
+log = get_logger("serve")
 
 
 def main() -> None:
@@ -45,12 +57,18 @@ def main() -> None:
                     help="with --sharded: after serving, migrate replica 0 "
                          "live onto a slice of this shape carved from the "
                          "leftover devices, and re-verify outputs")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="export a Chrome trace (Perfetto) of the run, with "
+                         "the metrics snapshot and drained device counters "
+                         "embedded")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     params = init_params(jax.random.key(0), cfg)
-    print(f"[serve] arch={cfg.name} params={cfg.param_count()/1e6:.2f}M "
-          f"devices={jax.device_count()}")
+    log.info(f"arch={cfg.name} params={cfg.param_count()/1e6:.2f}M "
+             f"devices={jax.device_count()}")
+
+    tracer, metrics = (Tracer(), MetricsRegistry()) if args.trace else (None, None)
 
     spare = []
     if args.sharded:
@@ -58,15 +76,27 @@ def main() -> None:
                   for s in args.mesh_shapes.split(",")]
         fleet, spare = mesh_backed_fleet(cfg, params, shapes, max_len=128,
                                          return_spare=True)
-        print(f"[serve] mesh-backed fleet: "
-              f"{[r.mesh_shape for r in fleet]} slices "
-              f"({len(spare)} spare devices)")
+        log.info(f"mesh-backed fleet: {[r.mesh_shape for r in fleet]} slices "
+                 f"({len(spare)} spare devices)")
     else:
         speeds = [1.0, 0.7, 1.4][: args.replicas] or [1.0]
         fleet = [ReplicaHandle(f"replica{i}(x{s})",
                                ServeEngine(cfg, params, max_len=128), speed=s)
                  for i, s in enumerate(speeds)]
-    front = HeftFrontEnd(fleet)
+
+    fabric = None
+    if args.trace:
+        # Route mapping events through an instrumented fabric: decision
+        # spans + the per-decision latency histogram + device-resident
+        # counters.  The numpy backend's decisions are bit-identical to the
+        # heft_rt_numpy path this launcher uses untraced.
+        from repro.sched_integration.fabric import MappingFabric
+
+        fabric = MappingFabric(len(fleet), backend="numpy", tracer=tracer,
+                               metrics=metrics, device_counters=True)
+        for r in fleet:
+            r.engine.tracer = tracer
+    front = HeftFrontEnd(fleet, fabric=fabric, tracer=tracer, metrics=metrics)
 
     rng = np.random.default_rng(0)
     requests = [
@@ -74,13 +104,11 @@ def main() -> None:
          args.new_tokens)
         for _ in range(args.requests)
     ]
-    t0 = time.time()
-    outs, counts = front.run_batch(requests)
-    dt = time.time() - t0
-    print(f"[serve] {len(outs)} requests in {dt:.2f}s "
-          f"({sum(len(p)+args.new_tokens for p,_ in requests)/dt:.0f} tok/s)")
-    print(f"[serve] request distribution (HEFT_RT): {counts}")
-    print(f"[serve] sample output ids: {outs[0][0, -8:].tolist()}")
+    (outs, counts), dt = time_s(front.run_batch, requests)
+    log.info(f"{len(outs)} requests in {dt:.2f}s "
+             f"({sum(len(p)+args.new_tokens for p,_ in requests)/dt:.0f} tok/s)")
+    log.info(f"request distribution (HEFT_RT): {counts}")
+    log.info(f"sample output ids: {outs[0][0, -8:].tolist()}")
 
     if args.reshard_to:
         if not args.sharded:
@@ -97,14 +125,23 @@ def main() -> None:
         old = fleet[0].mesh_shape
         fleet[0].engine.reshard(target)
         fleet[0].sync_mesh_identity()     # speed/rates follow the new slice
-        print(f"[serve] replica 0 resharded live: {old} -> "
-              f"{fleet[0].mesh_shape} (speed x{fleet[0].speed:.0f})")
+        log.info(f"replica 0 resharded live: {old} -> "
+                 f"{fleet[0].mesh_shape} (speed x{fleet[0].speed:.0f})")
         outs2, _ = front.run_batch(requests)
         same = all(np.array_equal(a, b) for a, b in zip(outs, outs2))
-        print(f"[serve] post-reshard outputs "
-              f"{'token-identical' if same else 'MISMATCH'}")
+        log.info(f"post-reshard outputs "
+                 f"{'token-identical' if same else 'MISMATCH'}")
         if not same:
             raise SystemExit(1)     # the verification must fail loudly
+
+    if args.trace:
+        # Drained device counters land in the metrics snapshot next to the
+        # latency histograms, so one artifact carries the whole picture.
+        for name, value in fabric.drain_counters().items():
+            metrics.gauge("fabric.device", counter=name).set(value)
+        tracer.export(args.trace, metrics=metrics)
+        log.info(f"trace: {args.trace} ({len(tracer)} events, "
+                 f"{len(metrics)} metrics)")
 
 
 if __name__ == "__main__":

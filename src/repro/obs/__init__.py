@@ -1,0 +1,37 @@
+# repro.obs — unified tracing + metrics: bounded-ring Tracer with Perfetto
+# (Chrome trace-event) export, Counter/Gauge/log-bucketed Histogram registry,
+# device-resident scheduler counters, and the REPRO_LOG leveled logger.
+from repro.obs.device import (
+    COUNTER_NAMES,
+    NUM_COUNTERS,
+    accumulate_counters,
+    accumulate_counters_np,
+    counters_dict,
+    zero_counters,
+)
+from repro.obs.log import LOG_LEVELS, get_logger, log_level
+from repro.obs.metrics import (
+    HIST_BUCKETS,
+    HIST_MIN_S,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Stopwatch,
+    time_s,
+)
+from repro.obs.trace import (
+    NULL_TRACER,
+    TraceEvent,
+    Tracer,
+    validate_chrome_trace,
+)
+
+__all__ = [
+    "COUNTER_NAMES", "NUM_COUNTERS", "accumulate_counters",
+    "accumulate_counters_np", "counters_dict", "zero_counters",
+    "LOG_LEVELS", "get_logger", "log_level",
+    "HIST_BUCKETS", "HIST_MIN_S", "Counter", "Gauge", "Histogram",
+    "MetricsRegistry", "Stopwatch", "time_s",
+    "NULL_TRACER", "TraceEvent", "Tracer", "validate_chrome_trace",
+]

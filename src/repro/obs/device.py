@@ -1,0 +1,104 @@
+"""Device-resident scheduler counters — the software analogue of the
+paper's hardware performance counters.
+
+The paper's FPGA overlay can report per-decision statistics without
+perturbing the scheduler because the counters are *fabric registers*
+updated in the same cycle as the decision.  The TPU-side analogue: the
+mapping fabric's jitted dispatch carries an extra donated f32 register
+vector, accumulated *inside* the compiled program from the decision
+outputs — no per-event host sync, no extra dispatch.  ``MappingFabric``
+drains the registers on demand (one host transfer), exactly like reading
+the overlay's counter file over AXI.
+
+Counter lanes (:data:`COUNTER_NAMES`):
+
+* ``events`` — mapping events dispatched (batch rows count individually),
+* ``decisions`` — tasks actually committed to a PE (assignment ≥ 0),
+* ``occupancy`` — total real (non-padding) ready-queue slots seen; divided
+  by ``events`` this is the mean bucket occupancy, the padding-efficiency
+  signal of the power-of-two bucketing,
+* ``t_avail_spread`` — Σ per-event (max − min) of the post-event T_avail
+  registers over real PE lanes: the load-imbalance integral (0 for a
+  perfectly balanced pool).
+
+Accumulation is pure arithmetic on the dispatch *outputs*, so the schedule
+itself is bit-identical with counters on or off (property-tested against
+the ``heft_rt_numpy`` oracle in ``tests/test_obs.py``).
+
+Counters are f32 on device: counts stay exact up to 2**24 events per
+drain — drain (which zeroes by default) well before that.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+COUNTER_NAMES = ("events", "decisions", "occupancy", "t_avail_spread")
+NUM_COUNTERS = len(COUNTER_NAMES)
+
+
+def zero_counters():
+    """Fresh device counter registers (f32[NUM_COUNTERS])."""
+    return jnp.zeros((NUM_COUNTERS,), dtype=jnp.float32)
+
+
+def accumulate_counters(counters, assignment, new_avail, valid, p_valid):
+    """Fold one dispatch's outputs into the counter registers (traceable).
+
+    ``assignment``/``valid``: (D,) or (B, D); ``new_avail``: (P,) or
+    (B, P); ``p_valid``: (P,) real-lane mask (False on padded PE lanes,
+    whose registers are inert but present on device).  Returns the new
+    register vector; runs inside the fabric's jitted dispatch, so the
+    donated input buffer is reused in place.
+    """
+    if assignment.ndim == 1:
+        assignment = assignment[None]
+        new_avail = new_avail[None]
+        valid = valid[None]
+    row_valid = jnp.any(valid, axis=1)           # padded batch rows are inert
+    events = jnp.sum(row_valid)
+    decisions = jnp.sum((assignment >= 0) & valid)
+    occupancy = jnp.sum(valid)
+    mx = jnp.max(jnp.where(p_valid[None, :], new_avail, -jnp.inf), axis=1)
+    mn = jnp.min(jnp.where(p_valid[None, :], new_avail, jnp.inf), axis=1)
+    spread = jnp.sum(jnp.where(row_valid, mx - mn, 0.0))
+    delta = jnp.stack([events, decisions, occupancy, spread])
+    return counters + delta.astype(counters.dtype)
+
+
+def accumulate_counters_np(counters, assignment, new_avail, valid=None):
+    """Host twin for the fabric's numpy backend (no padded lanes there).
+
+    ``counters`` is a mutable f64 array updated in place; semantics match
+    :func:`accumulate_counters` lane for lane.
+    """
+    assignment = np.asarray(assignment)
+    new_avail = np.asarray(new_avail)
+    if valid is None and assignment.ndim == 1:
+        # Hot path (per-event map_event): scalar ops, no temporaries beyond
+        # one bool mask — this runs once per mapping event.
+        counters[0] += 1.0
+        counters[1] += int((assignment >= 0).sum())
+        counters[2] += assignment.size
+        counters[3] += float(new_avail.max() - new_avail.min())
+        return counters
+    assignment = np.atleast_2d(assignment)
+    new_avail = np.atleast_2d(new_avail)
+    if valid is None:
+        valid = np.ones(assignment.shape, dtype=bool)
+    counters[0] += np.sum(np.any(valid, axis=1))
+    counters[1] += np.sum((assignment >= 0) & valid)
+    counters[2] += np.sum(valid)
+    counters[3] += np.sum(new_avail.max(axis=1) - new_avail.min(axis=1))
+    return counters
+
+
+def counters_dict(values) -> dict[str, float]:
+    """Name → value view of a drained register vector."""
+    arr = np.asarray(values, dtype=np.float64)
+    if arr.shape != (NUM_COUNTERS,):
+        raise ValueError(
+            f"expected {NUM_COUNTERS} counter lanes, got shape {arr.shape}")
+    return {name: float(arr[i]) for i, name in enumerate(COUNTER_NAMES)}

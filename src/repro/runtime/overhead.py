@@ -22,13 +22,13 @@ A third, *measured* model wraps our actual software scheduler
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core import heft_rt_numpy, worst_case_cycles
 from repro.core.resource_model import PAPER_CRITICAL_PATH_NS
+from repro.obs.metrics import time_s
 
 # software HEFT_RT on the A53 (seconds)
 SW_BASE_S = 1.8e-6           # runtime entry/exit, queue marshalling
@@ -80,9 +80,8 @@ class OverheadModel:
         if self.kind == "none":
             return 0.0
         if self.kind == "measured":
-            t0 = time.perf_counter()
-            heft_rt_numpy(avg, exec_times, avail)
-            return time.perf_counter() - t0
+            _, dt = time_s(heft_rt_numpy, avg, exec_times, avail)
+            return dt
         raise ValueError(self.kind)
 
 

@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import math
 import os
+import time
 
 import numpy as np
 
@@ -51,6 +52,13 @@ import jax.numpy as jnp
 
 from repro.core.heft_rt import ScheduleResult, heft_rt
 from repro.kernels import heft_rt_hw
+from repro.obs.device import (
+    NUM_COUNTERS,
+    accumulate_counters,
+    accumulate_counters_np,
+    counters_dict,
+    zero_counters,
+)
 
 _INF = float("inf")
 
@@ -219,12 +227,28 @@ class MappingFabric:
         Force the Pallas interpret mode on/off (None: on iff not on TPU).
     avail:
         Initial availability registers (default zeros).
+    tracer / metrics:
+        Optional :class:`repro.obs.Tracer` / :class:`repro.obs.
+        MetricsRegistry`.  When attached, every ``map_event``/``map_batch``
+        records a span plus backend/bucket-labelled latency histograms
+        ("fabric.event_s" per event, "fabric.decision_s" per decision — the
+        paper's per-decision scheduling-latency axis), resizes emit instant
+        events, and compiled-variant cache misses count as retraces.  When
+        ``None`` (default) the dispatch path is exactly the uninstrumented
+        code (gated by ``benchmarks/bench_obs_overhead.py``).
+    device_counters:
+        Accumulate scheduler counters (decisions, bucket occupancy, T_avail
+        spread — see :mod:`repro.obs.device`) as extra donated registers
+        *inside* the jitted dispatch; :meth:`drain_counters` reads them on
+        demand with zero per-event host sync.  Decisions stay bit-identical
+        to the uninstrumented oracle.
     """
 
     def __init__(self, num_pes: int, *, backend: str = "auto",
                  min_bucket: int = 8, max_bucket: int = 1 << 16,
                  min_pe_bucket: int = 4,
-                 interpret: bool | None = None, avail=None):
+                 interpret: bool | None = None, avail=None,
+                 tracer=None, metrics=None, device_counters: bool = False):
         if backend == "auto":
             backend = default_backend()
         if backend not in BACKENDS:
@@ -239,6 +263,16 @@ class MappingFabric:
         self._batch_fn_cached = None
         self._events = 0
         self._resizes = 0
+        self._tracer = tracer
+        self._metrics = metrics
+        self._device_counters = bool(device_counters)
+        self._counters = None            # device registers / host accumulator
+        self._p_valid = None             # real-lane mask at the P bucket
+        self._shapes_seen: set = set()   # compiled-variant keys → retraces
+        self._retraces = 0
+        if self._device_counters:
+            self._counters = (np.zeros(NUM_COUNTERS)
+                              if backend == "numpy" else zero_counters())
         self.reset(avail)
 
     # -- availability registers ---------------------------------------------
@@ -256,6 +290,11 @@ class MappingFabric:
             # carry +inf exec columns in every event, so they are never
             # selected and their register values are inert.
             self._avail = jnp.asarray(self._pad_avail(a))
+            # Real-lane mask for the device counters' T_avail-spread lane
+            # (padded registers are inert, not meaningful load); cached on
+            # device so counted dispatches do not re-upload it per event.
+            self._p_valid = jnp.asarray(
+                np.arange(self.p_bucket) < self.num_pes)
 
     def _pad_avail(self, a) -> np.ndarray:
         pad = np.zeros(self.p_bucket, dtype=np.float32)
@@ -276,6 +315,76 @@ class MappingFabric:
     def resizes(self) -> int:
         """Resize events (grow/shrink/remap/resize) applied to the PE pool."""
         return self._resizes
+
+    @property
+    def retraces(self) -> int:
+        """Distinct compiled-dispatch shape variants entered (device
+        backends; each is one XLA trace+compile).  0 for numpy."""
+        return self._retraces
+
+    # -- observability -------------------------------------------------------
+
+    def attach_obs(self, tracer=None, metrics=None) -> None:
+        """Attach (or replace) the tracer / metrics registry after
+        construction — e.g. onto the fabric a policy factory built lazily."""
+        if tracer is not None:
+            self._tracer = tracer
+        if metrics is not None:
+            self._metrics = metrics
+
+    def drain_counters(self, *, reset: bool = True) -> dict[str, float]:
+        """Read the device-resident scheduler counters (one host transfer —
+        the AXI counter-file read of the paper's overlay).  ``reset`` zeroes
+        the registers for the next window.  Requires
+        ``device_counters=True``."""
+        if not self._device_counters:
+            raise ValueError(
+                "fabric was built without device_counters=True")
+        out = counters_dict(np.asarray(self._counters))
+        if reset:
+            self._counters = (np.zeros(NUM_COUNTERS)
+                              if self.backend == "numpy" else zero_counters())
+        return out
+
+    @staticmethod
+    def _pow2_label(n: int) -> int:
+        """Power-of-two ceiling for histogram bucket labels (the numpy
+        backend has no shape buckets; labelling by raw n would mint one
+        histogram per queue length)."""
+        return 1 << (max(int(n), 1) - 1).bit_length()
+
+    def _note_dispatch(self, kind: str, t0: float, dt: float,
+                       n: int, bucket: int) -> None:
+        """Record one dispatch's latency into the attached tracer/metrics
+        (called only when one is attached)."""
+        if self._metrics is not None:
+            self._metrics.histogram(
+                "fabric.event_s", backend=self.backend,
+                bucket=bucket).record(dt)
+            if n > 0:
+                # the paper's per-decision scheduling latency: one measured
+                # event amortized over its decisions
+                self._metrics.histogram(
+                    "fabric.decision_s", backend=self.backend).record(
+                        dt / n, n=n)
+        if self._tracer is not None:
+            self._tracer.complete(f"fabric.{kind}", t0, dt, n=n,
+                                  bucket=bucket, backend=self.backend)
+
+    def _note_shape(self, key: tuple) -> None:
+        """Count compiled-variant cache misses (a new bucketed shape on a
+        device backend is one retrace/compile)."""
+        if key in self._shapes_seen:
+            return
+        self._shapes_seen.add(key)
+        if self.backend == "numpy":
+            return
+        self._retraces += 1
+        if self._metrics is not None:
+            self._metrics.counter("fabric.retraces").inc()
+        if self._tracer is not None:
+            self._tracer.instant("fabric.retrace", shape=str(key),
+                                 backend=self.backend)
 
     # -- variable-P resize events -------------------------------------------
 
@@ -336,9 +445,17 @@ class MappingFabric:
             self.shrink(np.arange(new_p))
 
     def _set_registers(self, host_avail, new_p: int) -> None:
+        old_p = self.num_pes
         self.num_pes = int(new_p)
         self._resizes += 1
         self.reset(host_avail)
+        if self._metrics is not None:
+            self._metrics.counter("fabric.resizes").inc()
+            self._metrics.gauge("fabric.num_pes").set(self.num_pes)
+        if self._tracer is not None:
+            self._tracer.instant("fabric.resize", old_p=old_p,
+                                 new_p=self.num_pes,
+                                 p_bucket=self.p_bucket)
 
     # -- bucketing -----------------------------------------------------------
 
@@ -387,14 +504,35 @@ class MappingFabric:
 
     def _event_fn(self):
         # One callable serves every bucket: jit specializes per shape
-        # internally, and the pallas wrapper is shape-agnostic.
+        # internally, and the pallas wrapper is shape-agnostic.  With
+        # device_counters the compiled program carries the counter registers
+        # as an extra donated argument and folds the decision outputs into
+        # them in the same dispatch (see repro.obs.device) — the schedule
+        # outputs are untouched.
         if self._event_fn_cached is None:
+            counted = self._device_counters
             if self.backend == "pallas":
                 interp = self._interpret
 
-                def fn(avg, ex, avail, valid):  # valid is baked into padding
-                    return ScheduleResult(*heft_rt_hw(avg, ex, avail,
-                                                      interpret=interp))
+                if counted:
+                    def fn(avg, ex, avail, valid, counters, p_valid):
+                        res = ScheduleResult(*heft_rt_hw(avg, ex, avail,
+                                                         interpret=interp))
+                        return res, accumulate_counters(
+                            counters, res.assignment, res.new_avail,
+                            valid, p_valid)
+                else:
+                    def fn(avg, ex, avail, valid):  # valid baked into padding
+                        return ScheduleResult(*heft_rt_hw(avg, ex, avail,
+                                                          interpret=interp))
+            elif counted:
+                def counted_event(avg, ex, avail, valid, counters, p_valid):
+                    res = heft_rt(avg, ex, avail, valid)
+                    return res, accumulate_counters(
+                        counters, res.assignment, res.new_avail, valid,
+                        p_valid)
+
+                fn = jax.jit(counted_event, donate_argnums=(2, 4))
             else:
                 # donate_argnums keeps T_avail device-resident: the register
                 # file buffer is reused for new_avail instead of copied.
@@ -404,18 +542,43 @@ class MappingFabric:
 
     def _batch_fn(self):
         if self._batch_fn_cached is None:
+            counted = self._device_counters
             if self.backend == "pallas":
                 interp = self._interpret
                 inner = jax.vmap(
                     lambda a, e, v: ScheduleResult(*heft_rt_hw(a, e, v,
                                                                interpret=interp)))
 
-                def fn(avg, ex, avail, valid):
-                    return inner(avg, ex, avail)
+                if counted:
+                    def fn(avg, ex, avail, valid, counters, p_valid):
+                        res = inner(avg, ex, avail)
+                        return res, accumulate_counters(
+                            counters, res.assignment, res.new_avail,
+                            valid, p_valid)
+                else:
+                    def fn(avg, ex, avail, valid):
+                        return inner(avg, ex, avail)
+            elif counted:
+                def counted_batch(avg, ex, avail, valid, counters, p_valid):
+                    res = jax.vmap(heft_rt)(avg, ex, avail, valid)
+                    return res, accumulate_counters(
+                        counters, res.assignment, res.new_avail, valid,
+                        p_valid)
+
+                fn = jax.jit(counted_batch, donate_argnums=(2, 4))
             else:
                 fn = jax.jit(jax.vmap(heft_rt), donate_argnums=(2,))
             self._batch_fn_cached = fn
         return self._batch_fn_cached
+
+    def _dispatch_event(self, fn, a_p, ex_p, av_in, valid):
+        """Run one compiled dispatch, threading the device counter
+        registers through when enabled."""
+        if self._device_counters:
+            res, self._counters = fn(a_p, ex_p, av_in, valid,
+                                     self._counters, self._p_valid)
+            return res
+        return fn(a_p, ex_p, av_in, valid)
 
     # -- mapping events ------------------------------------------------------
 
@@ -438,13 +601,22 @@ class MappingFabric:
         if update is None:
             update = use_resident
         self._events += 1
+        obs_on = self._metrics is not None or self._tracer is not None
+        t0 = time.perf_counter() if obs_on else 0.0
         if self.backend == "numpy":
             av_in = self._avail if use_resident else np.asarray(avail)
             out = heft_rt_fast(avg, exec_times, av_in)
             if update:
                 self._avail = out[4].copy()
+            if self._device_counters:
+                accumulate_counters_np(self._counters, out[1], out[4])
+            if obs_on:
+                self._note_dispatch("map_event", t0,
+                                    time.perf_counter() - t0, n,
+                                    self._pow2_label(n))
             return out
         a_p, ex_p, valid = self._pad_event(avg, exec_times)
+        self._note_shape(("event", len(a_p), self.p_bucket))
         if use_resident:
             # The register file is donated to the call; when the caller wants
             # the registers left alone, donate a copy instead.
@@ -452,12 +624,15 @@ class MappingFabric:
         else:
             av_in = jnp.asarray(
                 self._pad_avail(np.asarray(avail, dtype=np.float64)))
-        res = self._event_fn()(a_p, ex_p, av_in, valid)
+        res = self._dispatch_event(self._event_fn(), a_p, ex_p, av_in, valid)
         if update:
             self._avail = res.new_avail
         out = (np.asarray(res.order)[:n], np.asarray(res.assignment)[:n],
                np.asarray(res.start_time)[:n], np.asarray(res.finish_time)[:n],
                np.asarray(res.new_avail)[: self.num_pes])
+        if obs_on:
+            self._note_dispatch("map_event", t0, time.perf_counter() - t0,
+                                n, len(a_p))
         return out
 
     def map_batch(self, avg, exec_times, avail) -> ScheduleResult:
@@ -475,13 +650,24 @@ class MappingFabric:
         self._check_p(exec_times)
         B, D = avg.shape
         self._events += B
+        obs_on = self._metrics is not None or self._tracer is not None
+        t0 = time.perf_counter() if obs_on else 0.0
         if self.backend == "numpy":
             outs = [heft_rt_fast(avg[i], exec_times[i], avail_np[i])
                     for i in range(B)]
-            return ScheduleResult(*(np.stack(cols) for cols in zip(*outs)))
+            out = ScheduleResult(*(np.stack(cols) for cols in zip(*outs)))
+            if self._device_counters:
+                accumulate_counters_np(self._counters, out.assignment,
+                                       out.new_avail)
+            if obs_on:
+                self._note_dispatch("map_batch", t0,
+                                    time.perf_counter() - t0, B * D,
+                                    self._pow2_label(D))
+            return out
         Db = self.bucket_size(D)
         Bb = self.bucket_size(B)
         Pb = self.p_bucket
+        self._note_shape(("batch", Bb, Db, Pb))
         a_p = np.full((Bb, Db), -_INF, dtype=np.float32)
         a_p[:B, :D] = np.where(np.isnan(avg), -_INF, avg)
         ex_p = np.full((Bb, Db, Pb), _INF, dtype=np.float32)
@@ -490,10 +676,15 @@ class MappingFabric:
         av_p[:B, : self.num_pes] = avail_np
         valid = np.zeros((Bb, Db), dtype=bool)
         valid[:B, :D] = True
-        res = self._batch_fn()(a_p, ex_p, jnp.asarray(av_p), valid)
-        return ScheduleResult(res.order[:B, :D], res.assignment[:B, :D],
-                              res.start_time[:B, :D], res.finish_time[:B, :D],
-                              res.new_avail[:B, : self.num_pes])
+        res = self._dispatch_event(self._batch_fn(), a_p, ex_p,
+                                   jnp.asarray(av_p), valid)
+        out = ScheduleResult(res.order[:B, :D], res.assignment[:B, :D],
+                             res.start_time[:B, :D], res.finish_time[:B, :D],
+                             res.new_avail[:B, : self.num_pes])
+        if obs_on:
+            self._note_dispatch("map_batch", t0, time.perf_counter() - t0,
+                                B * D, Db)
+        return out
 
     # -- consumer-facing contracts ------------------------------------------
 
@@ -514,9 +705,18 @@ class MappingFabric:
         if self.backend == "numpy":
             ex = np.asarray(exec_times, dtype=np.float64)
             self._events += 1
+            obs_on = self._metrics is not None or self._tracer is not None
+            t0 = time.perf_counter() if obs_on else 0.0
             order = np.argsort(-(ex.sum(axis=1) / P), kind="stable")
             av = np.asarray(avail, dtype=np.float64).tolist()
             assignment, _, _ = _eft_chain(ex[order].tolist(), av)
+            if self._device_counters:
+                accumulate_counters_np(self._counters,
+                                       np.asarray(assignment),
+                                       np.asarray(av))
+            if obs_on:
+                self._note_dispatch("assign", t0, time.perf_counter() - t0,
+                                    n, self._pow2_label(n))
         else:
             order, assignment, _, _, _ = self.map_event(
                 exec_times=exec_times, avg=exec_times.mean(axis=1),
@@ -550,7 +750,8 @@ class MappingFabric:
         return out
 
 
-def make_policy_fabric(backend: str | None = None):
+def make_policy_fabric(backend: str | None = None, *, tracer=None,
+                       metrics=None, device_counters: bool = False):
     """Serving-policy factory backed by a :class:`MappingFabric`.
 
     The returned policy matches ``policy_heft_rt`` decision-for-decision;
@@ -560,6 +761,11 @@ def make_policy_fabric(backend: str | None = None):
     survive every resize inside a P bucket.  ``backend=None`` honours
     ``REPRO_FABRIC_BACKEND`` (the CI backend matrix) and defaults to the
     oracle-exact numpy host path otherwise.
+
+    ``tracer``/``metrics``/``device_counters`` thread the observability
+    layer into the lazily built fabric (see :class:`MappingFabric`); the
+    fabric is reachable afterwards via the policy's ``fabric()`` attribute
+    (None until the first mapping event).
     """
     if backend is None:
         backend = _env_backend() or "numpy"
@@ -568,11 +774,14 @@ def make_policy_fabric(backend: str | None = None):
     def policy(exec_times, avail):
         nonlocal fab
         if fab is None:
-            fab = MappingFabric(exec_times.shape[1], backend=backend)
+            fab = MappingFabric(exec_times.shape[1], backend=backend,
+                                tracer=tracer, metrics=metrics,
+                                device_counters=device_counters)
         elif fab.num_pes != exec_times.shape[1]:
             # registers are irrelevant here (the policy passes avail
             # explicitly), so the prefix-keeping resize is safe
             fab.resize(exec_times.shape[1])
         return fab.assign(exec_times, avail)
 
+    policy.fabric = lambda: fab
     return policy

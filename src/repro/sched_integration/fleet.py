@@ -36,6 +36,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.obs.trace import TraceEvent
 from repro.sched_integration.serve_scheduler import Replica, Request
 
 
@@ -155,15 +156,39 @@ class FleetController:
     device pool; see :func:`grown_replica_factory`).  The controller owns
     the lifecycle of what it adds: shrink decisions retire its own grown
     replicas (most recent first) and never touch the base fleet.
+
+    The decision trace is structured: ``events`` is a list of
+    :class:`repro.obs.TraceEvent` instants (``fleet.grow`` /
+    ``fleet.shrink``, stamped at *simulated* time, with the decision's
+    ``t``/``kind``/``why`` in args), mirrored into an attached ``tracer``
+    so controller decisions land on the same exported timeline as the
+    fabric/serve spans.  The legacy ``trace`` list of ``(t, kind, why)``
+    tuples is preserved as a derived view.
     """
 
-    def __init__(self, cfg: FleetControllerConfig, make_replica):
+    def __init__(self, cfg: FleetControllerConfig, make_replica, *,
+                 tracer=None):
         self.cfg = cfg
         self._make = make_replica
         self.grown: list[str] = []
-        self.trace: list[tuple[float, str, str]] = []
+        self.events: list[TraceEvent] = []   # structured decision trace
+        self._tracer = tracer
         self._last_t = -float("inf")
         self._next_id = 0
+
+    @property
+    def trace(self) -> list[tuple[float, str, str]]:
+        """Decision log as ``(t, kind, why)`` tuples (compat view over
+        :attr:`events`)."""
+        return [(e.args["t"], e.args["kind"], e.args["why"])
+                for e in self.events]
+
+    def _note(self, t: float, kind: str, why: str) -> None:
+        ev = TraceEvent(f"fleet.{kind}", "i", t * 1e6,
+                        args={"t": t, "kind": kind, "why": why})
+        self.events.append(ev)
+        if self._tracer is not None:
+            self._tracer.record(ev)
 
     def observe(self, t: float, *, queue_depth: int = 0,
                 backlog_s: float = 0.0,
@@ -183,7 +208,7 @@ class FleetController:
             p95 = f" p95={p95_s * 1e3:.0f}ms" if p95_s > 0 else ""
             why = (f"backlog={backlog_s:.2f}s queue={queue_depth}{p95} "
                    f"-> +{rep.name}")
-            self.trace.append((t, "grow", why))
+            self._note(t, "grow", why)
             return ResizeEvent(t, add=(rep,), reason=why)
         drained = (backlog_s <= cfg.shrink_backlog_s
                    and queue_depth <= cfg.shrink_queue_depth)
@@ -191,7 +216,7 @@ class FleetController:
             name = self.grown.pop()
             self._last_t = t
             why = f"backlog={backlog_s:.2f}s queue={queue_depth} -> -{name}"
-            self.trace.append((t, "shrink", why))
+            self._note(t, "shrink", why)
             return ResizeEvent(t, remove=(name,), reason=why)
         return None
 

@@ -163,7 +163,9 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
                      exec_matrix: np.ndarray | None = None,
                      cost_registry=None,
                      fleet_events=None,
-                     controller=None) -> ServeResult:
+                     controller=None,
+                     tracer=None,
+                     metrics=None) -> ServeResult:
     """Tick-based continuous dispatch, event-horizon-driven: at every tick
     with arrived work, the ready queue is mapped by ``policy`` onto replica
     queues and committed in one vectorized pass; ticks with no ready work
@@ -191,6 +193,14 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
     Removal is drain-then-leave (committed work finishes; no new
     assignments).  With an elastic fleet, ``replica_util`` covers the final
     roster.
+
+    Observability: ``tracer`` (a :class:`repro.obs.Tracer`) gets a
+    ``serve.queue_depth`` counter timeline stamped at each mapping event's
+    *simulated* time plus ``serve.resize`` instants; ``metrics`` (a
+    :class:`repro.obs.MetricsRegistry`) gets mapping-event / commit counters
+    and, at the end, per-replica busy/idle utilization gauges and
+    served/unserved counts.  Both only *read* simulator state — the
+    ``ServeResult`` is bit-identical with or without them.
     """
     replicas = list(replicas)
     P = len(replicas)
@@ -266,6 +276,10 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
             ex_all = np.concatenate([ex_all, _exec_column(rep)], axis=1)
         if not replicas:
             raise ValueError(f"resize event at t={e.t} left the fleet empty")
+        if tracer is not None:
+            tracer.instant("serve.resize", ts_us=t * 1e6,
+                           add=[r.name for r in e.add], remove=list(e.remove),
+                           fleet=len(replicas))
 
     while idx < N or ready:
         t += tick
@@ -315,6 +329,17 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
                 if ev is not None:
                     _apply(ev)
 
+        if tracer is not None:
+            # Queue-depth timeline on the *simulated* clock: Perfetto renders
+            # "C" counter samples as a step chart, so one sample per mapping
+            # event reconstructs the full backlog curve.
+            tracer.counter("serve.queue_depth", ts_us=t * 1e6,
+                           depth=len(ready),
+                           backlog_s=float(np.mean(np.maximum(
+                               np.asarray(free_at) - t, 0.0))))
+        if metrics is not None:
+            metrics.counter("serve.mapping_events").inc()
+
         ex = ex_all[ready]
         assignment = policy(ex, np.maximum(free_at, t))
         a_list = np.asarray(assignment).tolist()
@@ -341,6 +366,10 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
             finish_all[ready[k]] = fin
             if p95_enabled:
                 done_lat.append((t, fin - arrivals[ready[k]]))
+        if metrics is not None:
+            n_committed = len(a_list) - len(leftovers)
+            if n_committed:
+                metrics.counter("serve.committed").inc(n_committed)
         ready = leftovers
 
         if not committed:
@@ -359,9 +388,22 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
 
     served = np.isfinite(finish_all)
     offered = N / (arrivals.max() + 1e-9)
+
+    def _final_metrics(util):
+        if metrics is None:
+            return
+        n_served = int(served.sum())
+        metrics.counter("serve.served").inc(n_served)
+        metrics.counter("serve.unserved").inc(N - n_served)
+        for rep, u in zip(replicas, util):
+            u = float(u)
+            metrics.gauge("serve.replica_util", replica=rep.name).set(u)
+            metrics.gauge("serve.replica_idle", replica=rep.name).set(1.0 - u)
+
     if not served.any():
         # Nothing ever scheduled (e.g. an all-+inf exec_matrix): report an
         # empty, well-defined result instead of NaN-percentile crashes.
+        _final_metrics(np.zeros(len(replicas)))
         return ServeResult(offered_rps=offered, achieved_rps=0.0,
                            p50_latency=np.nan, p99_latency=np.nan,
                            mean_latency=np.nan,
@@ -369,6 +411,7 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
                            served_mask=served)
     lat = finish_all[served] - arrivals[served]
     span = np.nanmax(finish_all) - arrivals.min()
+    _final_metrics(np.array(busy) / span)
     return ServeResult(
         offered_rps=offered,
         achieved_rps=int(served.sum()) / span,

@@ -34,11 +34,19 @@ from repro.dist.hints import sharding_policy
 from repro.dist.sharding import MeshAxes, named, replica_pspecs, reshard_tree
 from repro.models.config import ModelConfig
 from repro.models.model import decode_step, prefill_step
+from repro.obs.metrics import Stopwatch
 
 
 def _host_scale_s(prompt_tokens, new_tokens):
     """The abstract-fleet service-time estimate (seconds, elementwise)."""
     return 1e-4 * prompt_tokens + 2e-3 * new_tokens
+
+
+def _span(tracer, name, **args):
+    """Tracer span, or a no-op context when no tracer is attached."""
+    if tracer is None:
+        return contextlib.nullcontext()
+    return tracer.span(name, **args)
 
 
 @dataclass
@@ -57,6 +65,7 @@ class ServeEngine:
     mesh: object | None = None          # jax Mesh slice backing this replica
     axes: MeshAxes | None = None
     fsdp: bool = True
+    tracer: object | None = None        # repro.obs.Tracer: step/reshard spans
 
     def __post_init__(self):
         self._build()
@@ -105,22 +114,27 @@ class ServeEngine:
 
         Returns the migrated cache tree (None when ``caches`` is None).
         """
-        self.mesh = mesh
-        if axes is not None:
-            self.axes = axes
-        if mesh is None:
-            # Actually vacate the old slice: params must not stay committed
-            # to devices the caller is about to re-carve for other replicas.
-            self.params = jax.tree.map(
-                lambda x: jnp.asarray(np.asarray(x)), self.params)
-        self._build()
-        if caches is not None:
-            if self._cache_sh is not None:
-                caches = reshard_tree(caches, self._cache_sh)
-            else:
-                caches = jax.tree.map(
-                    lambda x: jnp.asarray(np.asarray(x)), caches)
-        return caches
+        with _span(self.tracer, "engine.reshard",
+                   to=str(tuple(mesh.devices.shape)) if mesh is not None
+                   else "host",
+                   with_caches=caches is not None):
+            self.mesh = mesh
+            if axes is not None:
+                self.axes = axes
+            if mesh is None:
+                # Actually vacate the old slice: params must not stay
+                # committed to devices the caller is about to re-carve for
+                # other replicas.
+                self.params = jax.tree.map(
+                    lambda x: jnp.asarray(np.asarray(x)), self.params)
+            self._build()
+            if caches is not None:
+                if self._cache_sh is not None:
+                    caches = reshard_tree(caches, self._cache_sh)
+                else:
+                    caches = jax.tree.map(
+                        lambda x: jnp.asarray(np.asarray(x)), caches)
+            return caches
 
     @property
     def mesh_shape(self) -> tuple[int, ...] | None:
@@ -142,13 +156,15 @@ class ServeEngine:
         can pause decoding, migrate the caches through :meth:`reshard`, and
         resume on the new mesh slice.
         """
-        with self._ctx():
+        with self._ctx(), _span(self.tracer, "engine.prefill",
+                                B=int(prompts.shape[0]),
+                                S0=int(prompts.shape[1])):
             return self._prefill(self.params, jnp.asarray(prompts))
 
     def step(self, caches, tok, pos: int):
         """One decode step: (caches, (B, 1) tokens, position) → (logits,
         caches).  The cache tree is donated (pass the latest one)."""
-        with self._ctx():
+        with self._ctx(), _span(self.tracer, "engine.decode_step", pos=pos):
             return self._decode(self.params, caches, jnp.asarray(tok),
                                 jnp.int32(pos))
 
@@ -156,8 +172,13 @@ class ServeEngine:
                  greedy: bool = True, seed: int = 0):
         """prompts: (B, S0) int32 → (B, S0+new_tokens) generated ids."""
         B, S0 = prompts.shape
+        tr = self.tracer
         with self._ctx():
+            t0 = time.perf_counter()
             logits, caches = self._prefill(self.params, jnp.asarray(prompts))
+            if tr is not None:
+                tr.complete("engine.prefill", t0, time.perf_counter() - t0,
+                            B=B, S0=S0)
             out = [jnp.asarray(prompts)]
             key = jax.random.key(seed)
             tok = None
@@ -168,8 +189,12 @@ class ServeEngine:
                     key, sub = jax.random.split(key)
                     tok = jax.random.categorical(sub, logits).astype(jnp.int32)
                 out.append(tok[:, None])
+                t0 = time.perf_counter()
                 logits, caches = self._decode(self.params, caches, tok[:, None],
                                               jnp.int32(S0 + i))
+                if tr is not None:
+                    tr.complete("engine.decode_step", t0,
+                                time.perf_counter() - t0, pos=S0 + i)
             return np.asarray(jnp.concatenate(out, axis=1))
 
 
@@ -242,6 +267,8 @@ class HeftFrontEnd:
     replicas: list[ReplicaHandle]
     fabric: object | None = None      # MappingFabric, optional
     cost_registry: object | None = None
+    tracer: object | None = None      # repro.obs.Tracer: decision spans
+    metrics: object | None = None     # repro.obs.MetricsRegistry
 
     # -- dynamic handle registry (elastic fleet) ----------------------------
 
@@ -291,6 +318,9 @@ class HeftFrontEnd:
     def schedule(self, requests: list[tuple[np.ndarray, int]]):
         """requests: [(prompt, new_tokens)] → list of (req_idx, replica_idx)."""
         n, p = len(requests), len(self.replicas)
+        if self.tracer is not None:
+            self.tracer.counter("frontend.queue_depth", depth=n)
+        t0 = time.perf_counter()
         ex = self.exec_estimates(requests)
         avg = ex.mean(axis=1)
         avail = np.array([r.avail_at for r in self.replicas])
@@ -300,6 +330,14 @@ class HeftFrontEnd:
         else:
             order, assignment, start, finish, new_avail = heft_rt_numpy(
                 avg, ex, avail)
+        dt = time.perf_counter() - t0
+        if self.tracer is not None:
+            self.tracer.complete("frontend.schedule", t0, dt, n=n, p=p)
+        if self.metrics is not None:
+            # Per-decision scheduler latency: one measured batched event
+            # amortized over its n decisions (weight n keeps counts honest).
+            self.metrics.histogram("frontend.decision_s").record(
+                dt / max(n, 1), n=max(n, 1))
         for i, r in enumerate(self.replicas):
             r.avail_at = float(new_avail[i])
         return [(int(order[i]), int(assignment[i])) for i in range(n)]
@@ -308,11 +346,18 @@ class HeftFrontEnd:
         """Schedule + execute, returning (outputs, per-replica counts)."""
         plan = self.schedule(requests)
         outputs: dict[int, np.ndarray] = {}
+        gen_hist = (self.metrics.histogram("engine.generate_s")
+                    if self.metrics is not None else None)
         for req_idx, rep_idx in plan:
             prompt, new_tokens = requests[req_idx]
             rep = self.replicas[rep_idx]
-            t0 = time.perf_counter()
-            outputs[req_idx] = rep.engine.generate(prompt[None, :], new_tokens)
+            with Stopwatch(gen_hist) as sw:
+                outputs[req_idx] = rep.engine.generate(prompt[None, :],
+                                                       new_tokens)
+            if self.tracer is not None:
+                self.tracer.complete("frontend.generate", sw.start_s,
+                                     sw.elapsed_s, replica=rep.name,
+                                     new_tokens=new_tokens)
             rep.processed += 1
         return [outputs[i] for i in range(len(requests))], \
             {r.name: r.processed for r in self.replicas}

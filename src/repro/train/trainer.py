@@ -20,6 +20,7 @@ exists to prevent).
 from __future__ import annotations
 
 import contextlib
+import time
 from dataclasses import dataclass
 
 import jax
@@ -29,6 +30,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.dist.compression import (
+    EXACT_BYTES_PER_ELEM,
+    WIRE_BYTES_PER_ELEM,
+    WIRE_SCALE_BYTES_PER_LEAF,
     compressed_psum_mean,
     init_residual,
     reshard_residual,
@@ -234,8 +238,11 @@ class Trainer:
     """
 
     def __init__(self, cfg: ModelConfig, opt_cfg: AdamWConfig,
-                 data_cfg: DataConfig, tcfg: TrainerConfig):
+                 data_cfg: DataConfig, tcfg: TrainerConfig, *,
+                 tracer=None, metrics=None):
         self.cfg, self.opt_cfg, self.tcfg = cfg, opt_cfg, tcfg
+        self.tracer = tracer            # repro.obs.Tracer: per-step spans
+        self.metrics = metrics          # repro.obs.MetricsRegistry
         self.pipeline = TokenPipeline(data_cfg)
         self.ckpt = Checkpointer(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints)
 
@@ -343,6 +350,21 @@ class Trainer:
         total = steps if steps is not None else self.tcfg.total_steps
         history = []
         done = 0
+        obs_on = self.tracer is not None or self.metrics is not None
+        step_hist = (self.metrics.histogram("train.step_s")
+                     if self.metrics is not None else None)
+        # Cross-pod wire bytes per step, from the dist.compression payload
+        # model: each pod ships every grad leaf over the slow links once —
+        # int8 payload + f32 scales when compressed, f32 when exact.  Zero
+        # with no pod axis (no slow links to account).
+        wire_step = 0
+        if obs_on and self.pod_axis is not None and self.num_pods > 1:
+            leaves = jax.tree.leaves(params)
+            n_elems = sum(x.size for x in leaves)
+            wire_step = (
+                WIRE_BYTES_PER_ELEM * n_elems
+                + WIRE_SCALE_BYTES_PER_LEAF * len(leaves)
+                if self.compressed else EXACT_BYTES_PER_ELEM * n_elems)
         with contextlib.ExitStack() as stack:
             if self.mesh is not None:
                 stack.enter_context(jax.set_mesh(self.mesh))
@@ -350,9 +372,18 @@ class Trainer:
                     stack.enter_context(sharding_policy(self.policy))
             for step in range(start, total):
                 batch = self.pipeline.batch_at(step)
+                t0 = time.perf_counter() if obs_on else 0.0
                 params, opt_state, residual, metrics = self.step_fn(
                     params, opt_state, residual,
                     {k: jnp.asarray(v) for k, v in batch.items()})
+                if obs_on:
+                    dt = time.perf_counter() - t0
+                    if step_hist is not None:
+                        step_hist.record(dt)
+                    if self.metrics is not None and wire_step:
+                        self.metrics.counter("train.wire_bytes").inc(wire_step)
+                    if self.tracer is not None:
+                        self.tracer.complete("train.step", t0, dt, step=step)
                 if (step + 1) % self.tcfg.checkpoint_every == 0 or step + 1 == total:
                     self.save(step + 1, params, opt_state, residual)
                 if (step + 1) % self.tcfg.log_every == 0 or step + 1 == total:
