@@ -15,6 +15,7 @@ unit per row).
   bench_mapping_fabric           beyond-paper: fabric-batched mapping events
   bench_train_compress           beyond-paper: int8 pod-compressed train step
   bench_elastic_fleet            beyond-paper: elastic fleet resize events
+  bench_chaos                    beyond-paper: failure-trace goodput + recovery
   bench_expert_placement         beyond-paper: MoE expert rebalancing
   bench_energy                   paper future-work: energy-aware HEFT_RT
   bench_roofline                 deliverable (g): per-cell roofline terms
@@ -63,6 +64,7 @@ MODULES = [
     "bench_mapping_fabric",
     "bench_train_compress",
     "bench_elastic_fleet",
+    "bench_chaos",
     "bench_expert_placement",
     "bench_energy",
     "bench_roofline",
@@ -76,7 +78,7 @@ DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "artifacts")
 # listed here — ratio/derived rows ("x", "pct"), counts, free-form — are
 # informational and exempt from the gate.
 CHECK_DIRECTION = {
-    "ns": -1, "us": -1, "ms": -1, "s": -1, "B": -1,
+    "ns": -1, "us": -1, "ms": -1, "s": -1, "B": -1, "requests": -1,
     "events/s": 1, "rps": 1, "tok/s": 1, "frames/s": 1, "GB/s": 1,
 }
 
@@ -86,7 +88,7 @@ CHECK_DIRECTION = {
 # module's loose gate, and a silent drop cannot quietly rewrite the
 # baseline either (re-seed the artifact consciously when the model
 # legitimately changes).
-CHECK_EXACT_UNITS = {"B"}
+CHECK_EXACT_UNITS = {"B", "requests"}
 
 
 def _git_rev() -> str:

@@ -17,6 +17,16 @@ from the pool's leftover devices (``ServeEngine.reshard`` — params move in
 memory, no checkpoint), then serves the same requests again; outputs are
 verified token-identical across the migration.
 
+``--chaos TRACE.json`` replays a schema-validated failure timeline
+(``replica_loss`` / ``straggler`` / ``link_degrade`` / ``link_partition``;
+see ``repro.sched_integration.fleet.validate_failure_timeline``) against a
+simulator twin of the fleet, reports goodput (requests served inside the
+SLO) as a percentage of the failure-free run, and demonstrates live
+failover: the first lost replica is removed from the front end and the same
+requests re-serve token-identically on the survivors.  Goodput below
+``--min-goodput`` (or a failover mismatch) exits non-zero.  Replica targets
+in the trace may be unique name *prefixes* of fleet replicas.
+
 ``--trace OUT.json`` turns on the full observability stack — a
 ``repro.obs`` Tracer + MetricsRegistry attached to the front end and every
 engine, with the HEFT_RT mapping routed through an instrumented
@@ -61,6 +71,15 @@ def main() -> None:
                     help="export a Chrome trace (Perfetto) of the run, with "
                          "the metrics snapshot and drained device counters "
                          "embedded")
+    ap.add_argument("--chaos", default=None, metavar="TRACE.json",
+                    help="replay a schema-validated failure timeline against "
+                         "a simulator twin of the fleet and demo live "
+                         "failover; exits non-zero below --min-goodput")
+    ap.add_argument("--min-goodput", type=float, default=90.0,
+                    help="minimum chaos goodput as percent of the "
+                         "failure-free run (default 90)")
+    ap.add_argument("--slo-s", type=float, default=2.0,
+                    help="per-request latency SLO for the goodput metric")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -134,6 +153,9 @@ def main() -> None:
         if not same:
             raise SystemExit(1)     # the verification must fail loudly
 
+    if args.chaos:
+        _run_chaos(args, front, requests, outs, tracer, metrics)
+
     if args.trace:
         # Drained device counters land in the metrics snapshot next to the
         # latency histograms, so one artifact carries the whole picture.
@@ -142,6 +164,90 @@ def main() -> None:
         tracer.export(args.trace, metrics=metrics)
         log.info(f"trace: {args.trace} ({len(tracer)} events, "
                  f"{len(metrics)} metrics)")
+
+
+def _resolve_targets(timeline, names):
+    """Resolve replica-kind targets against the fleet, accepting unique name
+    prefixes (so a generic trace says ``replica1`` and matches
+    ``replica1(x0.7)``).  Link targets pass through untouched."""
+    from repro.sched_integration import FailureEvent
+
+    out = []
+    for e in timeline:
+        if e.kind in ("replica_loss", "straggler"):
+            hits = [n for n in names
+                    if n == e.target or n.startswith(e.target)]
+            if len(hits) != 1:
+                raise SystemExit(
+                    f"chaos target {e.target!r} matches "
+                    f"{hits or 'no replicas'} in {names}")
+            if hits[0] != e.target:
+                e = FailureEvent(e.t, e.kind, hits[0], e.duration_s,
+                                 e.factor, e.reason)
+        out.append(e)
+    return out
+
+
+def _run_chaos(args, front, requests, outs, tracer, metrics) -> None:
+    """The --chaos path: simulator-twin goodput gate + live failover demo."""
+    from repro.sched_integration import (
+        POLICIES, Replica, goodput, load_failure_timeline, make_requests,
+        simulate_serving, spine_topology)
+
+    timeline = load_failure_timeline(args.chaos)
+    names = [r.name for r in front.replicas]
+    timeline = _resolve_targets(timeline, names)
+
+    # Simulator twin: aggregate rates follow each handle's speed, scaled to
+    # pod-class capacity (a speed-1.0 replica ≈ a 256-chip v5e slice at 50%
+    # MFU), so the timeline replays against the live fleet's relative
+    # capacities at serving-realistic service times.  The offered load sits
+    # at ~60% of fleet capacity — the N+1 headroom a production fleet
+    # carries — so the goodput gate measures *recovery*, not the bare
+    # arithmetic of lost capacity.
+    twin = [Replica(r.name, 25000.0 * r.speed, 126000.0 * r.speed)
+            for r in front.replicas]
+    rate = 24.0 * sum(r.speed for r in front.replicas)
+    topo = None
+    if any(e.kind in ("link_degrade", "link_partition") for e in timeline):
+        # One pod per replica behind a shared spine — the maximally
+        # contended fabric; link targets address "podI:spine".
+        pod_of = {r.name: f"pod{i}" for i, r in enumerate(twin)}
+        topo = spine_topology(["gw"] + sorted(set(pod_of.values())), 100.0,
+                              pod_of=pod_of, gateway="gw")
+    load = make_requests(rate, 2.0, seed=0)
+    clean = simulate_serving(twin, load, POLICIES["heft_rt"](),
+                             active_params=7e9)
+    chaos = simulate_serving(twin, load, POLICIES["heft_rt"](),
+                             active_params=7e9, failure_events=timeline,
+                             topology=topo, tracer=tracer, metrics=metrics)
+    g_clean = goodput(clean, load, args.slo_s)
+    g_chaos = goodput(chaos, load, args.slo_s)
+    pct = 100.0 * g_chaos / max(g_clean, 1)
+    requeued = int(chaos.requeued.sum())
+    unserved = int((~chaos.served_mask).sum())
+    log.info(f"chaos: {len(timeline)} failures, goodput {g_chaos}/{g_clean} "
+             f"({pct:.1f}% of failure-free), {requeued} re-queued, "
+             f"{unserved} unserved")
+
+    # Live failover: kill the first lost replica on the real front end and
+    # re-serve the same requests — token-identical on the survivors proves
+    # no request depends on the dead engine.
+    losses = [e for e in timeline if e.kind == "replica_loss"]
+    if losses and len(front.replicas) > 1:
+        gone = front.remove_replica(losses[0].target)
+        outs2, _ = front.run_batch(requests)
+        same = all(np.array_equal(a, b) for a, b in zip(outs, outs2))
+        log.info(f"failover: lost {gone.name}, re-served "
+                 f"{len(outs2)} requests on {len(front.replicas)} survivors "
+                 f"({'token-identical' if same else 'MISMATCH'})")
+        if not same:
+            raise SystemExit(1)
+
+    if pct < args.min_goodput:
+        raise SystemExit(
+            f"chaos goodput {pct:.1f}% below --min-goodput "
+            f"{args.min_goodput}%")
 
 
 if __name__ == "__main__":

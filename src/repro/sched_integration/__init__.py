@@ -1,6 +1,6 @@
 # The paper's scheduler integrated as first-class framework features:
-# MoE expert placement, serving-request dispatch, and the fabric-batched
-# mapping-event pipeline.
+# MoE expert placement, serving-request dispatch, the fabric-batched
+# mapping-event pipeline, and the chaos tier (topology + failure timelines).
 from repro.sched_integration.expert_placement import (
     apply_placement,
     makespan,
@@ -27,18 +27,31 @@ from repro.sched_integration.serve_scheduler import (
     Request,
     ServeResult,
     default_fleet,
+    goodput,
     make_requests,
     mesh_fleet,
     simulate_serving,
 )
 from repro.sched_integration.fleet import (
+    FAILURE_KINDS,
+    FailureEvent,
     FleetController,
     FleetControllerConfig,
     ResizeEvent,
     grown_replica_factory,
+    load_failure_timeline,
     make_spike_requests,
     merge_event,
     split_event,
+    validate_failure_timeline,
+)
+from repro.sched_integration.topology import (
+    Link,
+    Topology,
+    fully_connected,
+    migration_bytes,
+    parse_link_target,
+    spine_topology,
 )
 
 __all__ = [
@@ -49,8 +62,11 @@ __all__ = [
     "MappingFabric", "eft_dispatch_numpy", "heft_rt_fast",
     "make_policy_fabric", "service_time_matrix",
     "POLICIES", "Replica", "Request", "ServeResult", "default_fleet",
-    "make_requests", "mesh_fleet", "simulate_serving",
-    "FleetController", "FleetControllerConfig", "ResizeEvent",
-    "grown_replica_factory", "make_spike_requests", "merge_event",
-    "split_event",
+    "goodput", "make_requests", "mesh_fleet", "simulate_serving",
+    "FAILURE_KINDS", "FailureEvent", "FleetController",
+    "FleetControllerConfig", "ResizeEvent", "grown_replica_factory",
+    "load_failure_timeline", "make_spike_requests", "merge_event",
+    "split_event", "validate_failure_timeline",
+    "Link", "Topology", "fully_connected", "migration_bytes",
+    "parse_link_target", "spine_topology",
 ]

@@ -268,6 +268,7 @@ class MappingFabric:
         self._device_counters = bool(device_counters)
         self._counters = None            # device registers / host accumulator
         self._p_valid = None             # real-lane mask at the P bucket
+        self._pe_mask = None             # chaos-tier unreachable-lane mask
         self._shapes_seen: set = set()   # compiled-variant keys → retraces
         self._retraces = 0
         if self._device_counters:
@@ -444,10 +445,40 @@ class MappingFabric:
         elif new_p < self.num_pes:
             self.shrink(np.arange(new_p))
 
+    def set_pe_mask(self, mask) -> None:
+        """Mask PE lanes out of dispatch (the chaos tier's partition mask).
+
+        ``mask`` is a ``(num_pes,)`` bool array — ``True`` lanes' exec
+        columns dispatch as ``+inf``, so no new work maps onto them while
+        their committed ``T_avail`` registers stay resident for recovery;
+        ``None`` clears the mask.  Decisions with a mask are exactly the
+        oracle's on the masked matrix; with no mask the dispatch path is
+        untouched.  Resizes (grow/shrink/remap) clear the mask — lane
+        indices change meaning, so the caller re-derives reachability.
+        """
+        if mask is None:
+            self._pe_mask = None
+            return
+        m = np.asarray(mask, dtype=bool)
+        if m.shape != (self.num_pes,):
+            raise ValueError(
+                f"pe mask must have shape ({self.num_pes},), got {m.shape}")
+        self._pe_mask = m
+
+    def _masked(self, exec_times):
+        """Apply the PE mask (+inf columns); the unmasked path returns the
+        input untouched — no copy, bit-identical dispatch."""
+        if self._pe_mask is None:
+            return exec_times
+        ex = np.array(exec_times, copy=True)
+        ex[..., self._pe_mask] = _INF
+        return ex
+
     def _set_registers(self, host_avail, new_p: int) -> None:
         old_p = self.num_pes
         self.num_pes = int(new_p)
         self._resizes += 1
+        self._pe_mask = None
         self.reset(host_avail)
         if self._metrics is not None:
             self._metrics.counter("fabric.resizes").inc()
@@ -593,7 +624,7 @@ class MappingFabric:
         arrays trimmed to the real queue length — the ``heft_rt_numpy``
         contract, in priority order.
         """
-        exec_times = np.asarray(exec_times)
+        exec_times = self._masked(np.asarray(exec_times))
         avg = np.asarray(avg)
         self._check_p(exec_times)
         n = exec_times.shape[0]
@@ -645,7 +676,7 @@ class MappingFabric:
         loops the host oracle (useful as a reference, not for speed).
         """
         avg = np.asarray(avg)
-        exec_times = np.asarray(exec_times)
+        exec_times = self._masked(np.asarray(exec_times))
         avail_np = np.asarray(avail)
         self._check_p(exec_times)
         B, D = avg.shape
@@ -699,7 +730,7 @@ class MappingFabric:
         — same pairwise sum, same divide — minus the reduction-machinery
         overhead.)
         """
-        exec_times = np.asarray(exec_times)
+        exec_times = self._masked(np.asarray(exec_times))
         self._check_p(exec_times)
         n, P = exec_times.shape
         if self.backend == "numpy":
@@ -734,7 +765,8 @@ class MappingFabric:
         priority order until total capacity is exhausted.
         """
         if self.backend == "numpy":
-            return eft_dispatch_numpy(avg, exec_times, avail, capacity)
+            return eft_dispatch_numpy(avg, self._masked(np.asarray(exec_times)),
+                                      avail, capacity)
         order, assignment, _, _, _ = self.map_event(avg, exec_times, avail,
                                                     update=False)
         cap = [int(c) for c in capacity]

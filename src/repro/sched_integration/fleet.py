@@ -1,4 +1,4 @@
-"""Elastic fleet subsystem: resize events + a load-driven fleet controller.
+"""Elastic fleet subsystem: resize + failure events and the fleet controller.
 
 The paper schedules *dynamically arriving* work onto a PE pool whose
 availability state lives in fabric registers — and on real SoCs the pool
@@ -11,6 +11,12 @@ split/merge as load shifts.  This module is the control plane for that:
   by name and/or add new :class:`~repro.sched_integration.serve_scheduler.
   Replica`s.  ``simulate_serving(fleet_events=[...])`` replays a scripted
   timeline; an empty timeline is bit-identical to the fixed-fleet simulator.
+* :class:`FailureEvent` — the chaos-tier timeline entry beside it: replica
+  loss mid-decode, straggler windows (PE speed degraded ×k), and link
+  degrade/partition windows on an attached
+  :class:`~repro.sched_integration.topology.Topology`.
+  ``simulate_serving(failure_events=[...])`` consumes them; an empty
+  timeline is bit-identical to the failure-free simulator.
 * :func:`split_event` / :func:`merge_event` — re-carve a replica's devices
   into smaller slices (or several replicas into one bigger slice), the
   simulator-side mirror of ``launch.mesh.slice_device_pool`` re-carving.
@@ -22,6 +28,20 @@ split/merge as load shifts.  This module is the control plane for that:
   the live-engine side drives :meth:`HeftFrontEnd.add_replica` /
   ``remove_replica`` (whose attached ``MappingFabric`` grows/shrinks its
   T_avail registers in place) plus ``ServeEngine.reshard`` for migrations.
+  The same controller owns *straggler remap*: per-replica backlog signals
+  (the serving twin of ``repro.obs``'s ``serve.replica_util`` /
+  ``fabric.decision_s`` rails) feed :meth:`FleetController.
+  observe_stragglers`, which flags replicas whose queue horizon runs
+  ``straggler_factor``× past the fleet median — under a per-replica
+  exponential backoff — and the simulator re-queues their not-yet-started
+  work onto the healthy fleet (bounded by the per-request retry budget).
+
+Recovery contract (enforced by ``simulate_serving``'s end-of-run invariant):
+work committed to a replica that is *lost* — whether still in the roster or
+already in its drain-then-leave window — is re-queued through the mapping
+policy, never silently dropped; every request ends exactly served or
+unserved, with its re-queue count in ``ServeResult.requeued``; a served
+request's finish never postdates its replica's loss instant.
 
 Cost-model coupling: a replica added with a mesh shape that was never
 dry-run gets its Exec_TID cells projected from the arch's largest measured
@@ -31,6 +51,7 @@ joiners are scheduled from calibrated estimates, not the blank roofline.
 
 from __future__ import annotations
 
+import json
 import math
 from dataclasses import dataclass
 
@@ -50,6 +71,115 @@ class ResizeEvent:
     add: tuple = ()
     remove: tuple = ()
     reason: str = ""
+
+
+# Chaos-tier failure kinds and their knobs:
+#   replica_loss   target=replica name.  The replica dies instantly (no
+#                  drain): unfinished committed work re-queues, the roster
+#                  shrinks.  A loss may also target a replica already in a
+#                  drain-then-leave window — its in-flight work re-queues
+#                  the same way.
+#   straggler      target=replica name, factor (>1: exec ×factor),
+#                  duration_s window.  Exec column, queue horizon, and
+#                  in-flight finishes stretch for the window, then restore
+#                  bit-exact from the cost model.
+#   link_degrade   target="podA:podB", factor in (0,1) scales bandwidth,
+#                  duration_s window.  Needs simulate_serving(topology=...).
+#   link_partition target="podA:podB", duration_s window: the link is down;
+#                  replicas cut off from the gateway are masked (+inf exec)
+#                  for the window, transfers wait the window out.
+FAILURE_KINDS = ("replica_loss", "straggler", "link_degrade",
+                 "link_partition")
+_WINDOWED_KINDS = ("straggler", "link_degrade", "link_partition")
+
+
+@dataclass(frozen=True)
+class FailureEvent:
+    """One chaos-timeline entry: at ``t``, ``kind`` strikes ``target``.
+
+    See :data:`FAILURE_KINDS` for the kind/knob inventory.  Windowed kinds
+    (everything but ``replica_loss``) recover automatically at
+    ``t + duration_s``; the simulator emits ``serve.failure`` /
+    ``serve.recovery`` tracer instants and ``serve.failures`` /
+    ``serve.retries`` counters for both edges.
+    """
+
+    t: float
+    kind: str
+    target: str
+    duration_s: float = 0.0
+    factor: float = 1.0
+    reason: str = ""
+
+    def __post_init__(self):
+        if self.kind not in FAILURE_KINDS:
+            raise ValueError(
+                f"failure kind must be one of {FAILURE_KINDS}, "
+                f"got {self.kind!r}")
+        if not self.target:
+            raise ValueError(f"failure event at t={self.t} has no target")
+        if self.kind in _WINDOWED_KINDS and not self.duration_s > 0:
+            raise ValueError(
+                f"{self.kind} at t={self.t} needs duration_s > 0, "
+                f"got {self.duration_s}")
+        if self.kind == "straggler" and not self.factor > 1.0:
+            raise ValueError(
+                f"straggler factor must be > 1 (a slowdown), "
+                f"got {self.factor}")
+        if self.kind == "link_degrade" and not (0.0 < self.factor < 1.0):
+            raise ValueError(
+                f"link_degrade factor must be in (0, 1), got {self.factor}")
+
+
+_TIMELINE_FIELDS = {"t": (int, float), "kind": str, "target": str,
+                    "duration_s": (int, float), "factor": (int, float),
+                    "reason": str}
+_TIMELINE_REQUIRED = ("t", "kind", "target")
+
+
+def validate_failure_timeline(obj) -> list[FailureEvent]:
+    """Schema-validate a chaos-trace object (the ``--chaos TRACE.json``
+    payload) and build the :class:`FailureEvent` timeline.
+
+    Same style as ``repro.obs.check``: loud ``ValueError`` on any schema
+    violation — unknown keys, missing required fields, wrong types, or
+    per-kind knob violations (delegated to ``FailureEvent.__post_init__``).
+    Schema::
+
+        {"events": [{"t": 0.5, "kind": "replica_loss", "target": "r0",
+                     "duration_s": 1.0, "factor": 4.0, "reason": "..."}]}
+    """
+    if not isinstance(obj, dict):
+        raise ValueError(f"chaos trace root must be an object, "
+                         f"got {type(obj).__name__}")
+    events = obj.get("events")
+    if not isinstance(events, list):
+        raise ValueError("chaos trace has no 'events' list")
+    out = []
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            raise ValueError(f"events[{i}] is not an object")
+        unknown = set(ev) - set(_TIMELINE_FIELDS)
+        if unknown:
+            raise ValueError(f"events[{i}] has unknown keys {sorted(unknown)} "
+                             f"(schema keys: {sorted(_TIMELINE_FIELDS)})")
+        for key in _TIMELINE_REQUIRED:
+            if key not in ev:
+                raise ValueError(f"events[{i}] missing required {key!r}")
+        for key, want in _TIMELINE_FIELDS.items():
+            if key in ev and not isinstance(ev[key], want):
+                raise ValueError(
+                    f"events[{i}].{key} must be "
+                    f"{getattr(want, '__name__', want)}, got {ev[key]!r}")
+        out.append(FailureEvent(**ev))
+    return out
+
+
+def load_failure_timeline(path: str) -> list[FailureEvent]:
+    """Load + schema-validate a ``--chaos TRACE.json`` failure timeline."""
+    with open(path) as f:
+        obj = json.load(f)
+    return validate_failure_timeline(obj)
 
 
 def _unit_rates(rep: Replica) -> tuple[float, float]:
@@ -146,6 +276,16 @@ class FleetControllerConfig:
     shrink_queue_depth: float = 2.0
     cooldown_s: float = 0.5
     max_grown: int = 4
+    # Straggler remap (chaos tier; inf disables).  A replica is flagged when
+    # its committed-but-unfinished backlog runs straggler_factor× past the
+    # fleet median (with straggler_min_backlog_s as an absolute floor, so a
+    # near-idle fleet never flags noise).  Re-flagging the same replica backs
+    # off exponentially from straggler_cooldown_s — a persistent straggler is
+    # remapped less and less often, bounding remap churn alongside the
+    # per-request retry budget.
+    straggler_factor: float = float("inf")
+    straggler_min_backlog_s: float = 0.5
+    straggler_cooldown_s: float = 0.5
 
 
 class FleetController:
@@ -175,6 +315,10 @@ class FleetController:
         self._tracer = tracer
         self._last_t = -float("inf")
         self._next_id = 0
+        # Straggler-remap backoff state: next allowed flag time and current
+        # backoff width, per replica name.
+        self._straggler_next: dict[str, float] = {}
+        self._straggler_backoff: dict[str, float] = {}
 
     @property
     def trace(self) -> list[tuple[float, str, str]]:
@@ -219,6 +363,45 @@ class FleetController:
             self._note(t, "shrink", why)
             return ResizeEvent(t, remove=(name,), reason=why)
         return None
+
+    def observe_stragglers(self, t: float, names, backlogs) -> list[str]:
+        """Flag replicas whose backlog runs ``straggler_factor``× past the
+        fleet median — the controller-driven remap trigger.
+
+        ``backlogs[i]`` is replica ``names[i]``'s committed-but-unfinished
+        queue horizon in seconds (``T_avail - t``, clamped at 0) — the same
+        signal ``repro.obs`` exposes as per-replica utilization.  Flagged
+        names are re-queued by the simulator (their not-yet-started work goes
+        back through the mapping policy); each flag doubles that replica's
+        personal backoff window starting from ``straggler_cooldown_s``, and
+        a replica observed healthy again resets its backoff.  Returns the
+        flagged names (possibly empty); detection disabled while
+        ``straggler_factor`` is ``inf``.
+        """
+        cfg = self.cfg
+        if not math.isfinite(cfg.straggler_factor) or len(names) < 2:
+            return []
+        backlogs = [float(b) for b in backlogs]
+        med = float(np.median(backlogs))
+        bar = max(cfg.straggler_factor * med, cfg.straggler_min_backlog_s)
+        flagged = []
+        for name, b in zip(names, backlogs):
+            if b < bar:
+                # Healthy again: forgive the backoff history.
+                self._straggler_backoff.pop(name, None)
+                self._straggler_next.pop(name, None)
+                continue
+            if t < self._straggler_next.get(name, -float("inf")):
+                continue
+            backoff = self._straggler_backoff.get(
+                name, cfg.straggler_cooldown_s)
+            self._straggler_next[name] = t + backoff
+            self._straggler_backoff[name] = 2.0 * backoff
+            why = (f"backlog={b:.2f}s median={med:.2f}s "
+                   f"backoff={backoff:.2f}s -> remap {name}")
+            self._note(t, "remap", why)
+            flagged.append(name)
+        return flagged
 
 
 def grown_replica_factory(arch: str, shape, *, chip_tflops: float = 197.0,

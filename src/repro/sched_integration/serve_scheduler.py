@@ -20,12 +20,14 @@ commits its assignments with vectorized per-replica chains.
 
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core import heft_rt_numpy
 from repro.sched_integration.fabric import make_policy_fabric, service_time_matrix
+from repro.sched_integration.topology import migration_bytes, parse_link_target
 
 _INF = float("inf")
 
@@ -155,6 +157,9 @@ class ServeResult:
     mean_latency: float
     replica_util: np.ndarray
     served_mask: np.ndarray | None = None   # per-request served flags (N,)
+    requeued: np.ndarray | None = None      # per-request re-queue counts (N,)
+    finish_times: np.ndarray | None = None  # per-request finish (NaN: unserved)
+    final_avail: np.ndarray | None = None   # final-roster T_avail horizons (P,)
 
 
 def simulate_serving(replicas: list[Replica], requests: list[Request],
@@ -163,6 +168,9 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
                      exec_matrix: np.ndarray | None = None,
                      cost_registry=None,
                      fleet_events=None,
+                     failure_events=None,
+                     topology=None,
+                     retry_budget: int = 3,
                      controller=None,
                      tracer=None,
                      metrics=None) -> ServeResult:
@@ -194,11 +202,43 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
     assignments).  With an elastic fleet, ``replica_util`` covers the final
     roster.
 
+    Chaos tier: ``failure_events`` is a timeline of
+    :class:`~repro.sched_integration.fleet.FailureEvent`s beside the resize
+    timeline — ``replica_loss`` kills a replica instantly (its unfinished
+    work, mid-decode included, re-queues through the mapping policy with no
+    budget check: losses are never dropped), ``straggler`` slows a replica
+    ×factor for a window (exec column, queue horizon, and in-flight
+    starts/finishes stretch around the event time, then restore bit-exact
+    from the cost model at the window's end), and ``link_degrade`` /
+    ``link_partition`` drive an attached
+    :class:`~repro.sched_integration.topology.Topology` (partitioned
+    replicas' columns mask to ``+inf`` for the window — in-flight work keeps
+    running, new admissions divert).  Like resizes, failures apply lazily at
+    the next mapping event at or after their ``t``; failures striking after
+    the last dispatch are drained against in-flight work and their re-queues
+    re-enter the dispatch loop.  ``topology`` additionally charges each
+    joining replica's migration (``migration_bytes(active_params)`` from the
+    gateway to its pod, with link contention) as its initial queue horizon.
+    Straggler *remap* is controller-driven: a controller with a finite
+    ``straggler_factor`` observes per-replica backlogs each mapping event
+    and flagged replicas' not-yet-started work re-queues, bounded per
+    request by ``retry_budget``.  An empty/None failure timeline leaves
+    every code path untouched — bit-identical to the failure-free
+    simulator.
+
+    Recovery is *provable*, not assumed: the end-of-run invariant check
+    raises unless ``commits - requeues == served`` and every unserved
+    request holds no assignment — ``served_mask`` + ``requeued`` +
+    unserved account for the request set exactly, so a silently dropped
+    request is a crash, not a statistic.
+
     Observability: ``tracer`` (a :class:`repro.obs.Tracer`) gets a
     ``serve.queue_depth`` counter timeline stamped at each mapping event's
-    *simulated* time plus ``serve.resize`` instants; ``metrics`` (a
-    :class:`repro.obs.MetricsRegistry`) gets mapping-event / commit counters
-    and, at the end, per-replica busy/idle utilization gauges and
+    *simulated* time plus ``serve.resize`` / ``serve.failure`` /
+    ``serve.recovery`` / ``serve.requeue`` instants; ``metrics`` (a
+    :class:`repro.obs.MetricsRegistry`) gets mapping-event / commit
+    counters, ``serve.failures`` / ``serve.retries`` (labeled by kind /
+    cause), and, at the end, per-replica busy/idle utilization gauges and
     served/unserved counts.  Both only *read* simulator state — the
     ``ServeResult`` is bit-identical with or without them.
     """
@@ -207,13 +247,25 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
     N = len(requests)
     arrivals = np.array([r.arrival for r in requests])
     events = sorted(fleet_events, key=lambda e: e.t) if fleet_events else []
+    fails = sorted(failure_events, key=lambda e: e.t) if failure_events else []
     elastic = bool(events) or controller is not None
+    dynamic = elastic or bool(fails)
+    if fails and topology is None and any(
+            e.kind in ("link_degrade", "link_partition") for e in fails):
+        raise ValueError(
+            "link_degrade/link_partition failure events need a topology — "
+            "pass simulate_serving(topology=...)")
     if exec_matrix is not None:
         if elastic:
             raise ValueError(
                 "fleet_events/controller recompute Exec_TID columns as the "
                 "fleet resizes — use cost_registry or the roofline, not a "
                 "pinned exec_matrix")
+        if any(e.kind != "replica_loss" for e in fails):
+            raise ValueError(
+                "straggler/link failure events restore Exec_TID columns "
+                "from the cost model — use cost_registry or the roofline, "
+                "not a pinned exec_matrix")
         ex_all = np.asarray(exec_matrix, dtype=np.float64)
     elif cost_registry is not None:
         ex_all = cost_registry.exec_tid_matrix(requests, replicas,
@@ -242,7 +294,30 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
     p95_window_s = float(getattr(ctl_cfg, "p95_window_s", 5.0) or 5.0)
     idx = 0
     t = 0.0
-    ev_i = 0
+
+    # Unified event queue: scripted resizes, the failure timeline, and the
+    # recovery events windowed failures push at apply time, all popped in
+    # (t, insertion) order — at equal t resizes apply before failures, and
+    # both apply lazily at the next mapping event (commits only happen
+    # there, so the timelines are equivalent).
+    evq: list[tuple[float, int, str, object]] = []
+    ev_seq = 0
+    for e in events:
+        heapq.heappush(evq, (float(e.t), ev_seq, "resize", e))
+        ev_seq += 1
+    for e in fails:
+        heapq.heappush(evq, (float(e.t), ev_seq, "fail", e))
+        ev_seq += 1
+
+    # Per-request recovery accounting — the end-of-run invariant's books.
+    assigned_name: list[str | None] = [None] * N   # committed-to replica
+    start_all = np.full(N, np.nan)                 # committed start times
+    requeued_ct = np.zeros(N, dtype=np.int64)      # per-request re-queues
+    commits_total = 0
+    requeues_total = 0
+    strag_factors: dict[str, list[float]] = {}     # active straggler windows
+    masked: set[str] = set()                       # partition-unreachable
+    lost_at: dict[str, float] = {}                 # replica_loss instants
 
     def _exec_column(rep):
         # Exec_TID columns are independent per replica, so a resize only
@@ -271,9 +346,24 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
             if cost_registry is not None:
                 cost_registry.ensure_coverage(rep)
             replicas.append(rep)
-            free_at.append(0.0)
+            horizon = 0.0
+            if topology is not None and topology.gateway is not None:
+                pod = topology.pod_of.get(rep.name)
+                if pod is not None:
+                    # Topology-derived join: the joiner's params migrate
+                    # gateway → pod over contended links, so its horizon
+                    # opens at the transfer's finish instead of instantly.
+                    _, horizon = topology.transfer_s(
+                        migration_bytes(active_params), topology.gateway,
+                        pod, at=t)
+            free_at.append(horizon)
             busy.append(0.0)
+            lost_at.pop(rep.name, None)    # a re-used name is a new replica
             ex_all = np.concatenate([ex_all, _exec_column(rep)], axis=1)
+            if (topology is not None
+                    and not topology.replica_reachable(rep.name, at=t)):
+                masked.add(rep.name)
+                ex_all[:, len(replicas) - 1] = _INF
         if not replicas:
             raise ValueError(f"resize event at t={e.t} left the fleet empty")
         if tracer is not None:
@@ -281,7 +371,192 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
                            add=[r.name for r in e.add], remove=list(e.remove),
                            fleet=len(replicas))
 
-    while idx < N or ready:
+    def _rep_index(name):
+        return next((j for j, r in enumerate(replicas) if r.name == name),
+                    None)
+
+    def _refresh_column(i):
+        # Recompose replica i's Exec_TID column from its live chaos state:
+        # cost-model base × active straggler factors, +inf while
+        # partition-masked.  Bit-exact restore once all windows close.
+        rep = replicas[i]
+        if rep.name in masked:
+            ex_all[:, i] = _INF
+            return
+        col = _exec_column(rep)[:, 0]
+        for fac in strag_factors.get(rep.name, ()):
+            col = col * fac
+        ex_all[:, i] = col
+
+    def _remask(at):
+        # Re-derive the partition mask from topology reachability at `at`
+        # and refresh only the columns whose masked state flipped.
+        for i, rep in enumerate(replicas):
+            want = not topology.replica_reachable(rep.name, at=at)
+            if want == (rep.name in masked):
+                continue
+            (masked.add if want else masked.discard)(rep.name)
+            _refresh_column(i)
+
+    def _requeue(rids, cause):
+        nonlocal requeues_total
+        for rid in rids:
+            finish_all[rid] = np.nan
+            start_all[rid] = np.nan
+            assigned_name[rid] = None
+            requeued_ct[rid] += 1
+            requeues_total += 1
+            ready.append(rid)
+        if metrics is not None:
+            metrics.counter("serve.retries", cause=cause).inc(len(rids))
+        if tracer is not None:
+            tracer.instant("serve.requeue", ts_us=t * 1e6, cause=cause,
+                           requests=len(rids))
+
+    def _lose_replica(e):
+        nonlocal ex_all
+        name, tl = e.target, float(e.t)
+        lost_at[name] = tl
+        # Everything unfinished at the loss instant — mid-decode included,
+        # and regardless of whether the replica is still in the roster or
+        # already draining — re-queues.  No budget check: never dropped.
+        lost = [rid for rid, an in enumerate(assigned_name)
+                if an == name and finish_all[rid] > tl]
+        if lost:
+            _requeue(lost, "replica_loss")
+        strag_factors.pop(name, None)
+        masked.discard(name)
+        i = _rep_index(name)
+        if i is not None:
+            if len(replicas) == 1:
+                raise ValueError(
+                    f"replica_loss at t={tl} left the fleet empty")
+            replicas.pop(i)
+            free_at.pop(i)
+            busy.pop(i)
+            ex_all = np.delete(ex_all, i, axis=1)
+        grown = getattr(controller, "grown", None)
+        if grown is not None and name in grown:
+            grown.remove(name)      # the controller must not re-shrink it
+
+    def _start_straggler(e):
+        # Window active [e.t, e.t + duration): exec column ×factor for new
+        # commits; in-flight starts/finishes and the queue horizon stretch
+        # around the pivot (work past e.t runs ×factor slower).
+        heapq.heappush(evq, (float(e.t) + e.duration_s, _push_seq(),
+                             "recover", e))
+        i = _rep_index(e.target)
+        if i is None:
+            return                   # target already left the roster: no-op
+        k, pivot, name = e.factor, float(e.t), e.target
+        strag_factors.setdefault(name, []).append(k)
+        _refresh_column(i)
+        for rid, an in enumerate(assigned_name):
+            if an != name or not finish_all[rid] > pivot:
+                continue
+            busy[i] += (k - 1.0) * (finish_all[rid]
+                                    - max(start_all[rid], pivot))
+            finish_all[rid] = pivot + k * (finish_all[rid] - pivot)
+            if start_all[rid] > pivot:
+                start_all[rid] = pivot + k * (start_all[rid] - pivot)
+        if free_at[i] > pivot:
+            free_at[i] = pivot + k * (free_at[i] - pivot)
+
+    def _apply_failure(e):
+        if tracer is not None:
+            tracer.instant("serve.failure", ts_us=t * 1e6, kind=e.kind,
+                           target=e.target, reason=e.reason)
+        if metrics is not None:
+            metrics.counter("serve.failures", kind=e.kind).inc()
+        if e.kind == "replica_loss":
+            _lose_replica(e)
+        elif e.kind == "straggler":
+            _start_straggler(e)
+        else:
+            a, b = parse_link_target(e.target)
+            heapq.heappush(evq, (float(e.t) + e.duration_s, _push_seq(),
+                                 "recover", e))
+            if e.kind == "link_degrade":
+                topology.degrade(a, b, e.factor)
+            else:
+                topology.set_down(a, b, float(e.t) + e.duration_s)
+                _remask(at=float(e.t))
+
+    def _apply_recovery(e):
+        if tracer is not None:
+            tracer.instant("serve.recovery", ts_us=t * 1e6, kind=e.kind,
+                           target=e.target)
+        tr = float(e.t) + e.duration_s
+        if e.kind == "link_degrade":
+            topology.restore(*parse_link_target(e.target))
+            return
+        if e.kind == "link_partition":
+            _remask(at=tr)
+            return
+        # Straggler window closes: un-stretch the portion past tr and
+        # restore the exec column bit-exact from the cost model.
+        name, k = e.target, e.factor
+        facs = strag_factors.get(name)
+        if not facs or k not in facs:
+            return                   # replica was lost mid-window
+        facs.remove(k)
+        if not facs:
+            strag_factors.pop(name, None)
+        i = _rep_index(name)
+        if i is None:
+            return                   # drained out of the roster mid-window
+        for rid, an in enumerate(assigned_name):
+            if an != name or not finish_all[rid] > tr:
+                continue
+            busy[i] -= (1.0 - 1.0 / k) * (finish_all[rid]
+                                          - max(start_all[rid], tr))
+            finish_all[rid] = tr + (finish_all[rid] - tr) / k
+            if start_all[rid] > tr:
+                start_all[rid] = tr + (start_all[rid] - tr) / k
+        if free_at[i] > tr:
+            free_at[i] = tr + (free_at[i] - tr) / k
+        _refresh_column(i)
+
+    def _push_seq():
+        nonlocal ev_seq
+        ev_seq += 1
+        return ev_seq
+
+    def _apply_event(kind, e):
+        if kind == "resize":
+            _apply(e)
+        elif kind == "fail":
+            _apply_failure(e)
+        else:
+            _apply_recovery(e)
+
+    def _remap_stragglers(flagged):
+        # Controller-flagged stragglers: re-queue their *not-yet-started*
+        # work (a FIFO-chain suffix — starts are nondecreasing along the
+        # chain) onto the healthy fleet, bounded per request by the retry
+        # budget; in-flight decode keeps running.
+        for name in flagged:
+            i = _rep_index(name)
+            if i is None:
+                continue
+            moved = [rid for rid, an in enumerate(assigned_name)
+                     if an == name and start_all[rid] > t
+                     and requeued_ct[rid] < retry_budget]
+            if not moved:
+                continue
+            mset = set(moved)
+            for rid in moved:
+                busy[i] -= finish_all[rid] - start_all[rid]
+            keep = [finish_all[rid] for rid, an in enumerate(assigned_name)
+                    if an == name and rid not in mset]
+            _requeue(moved, "straggler")
+            free_at[i] = max(keep, default=0.0)
+
+    # With a failure timeline, the loop stays alive past the last dispatch
+    # while timeline/recovery events remain: a loss can strike *in-flight*
+    # work after the final commit, and its re-queues re-enter dispatch.
+    pending_chaos = bool(fails)
+    while idx < N or ready or (pending_chaos and evq):
         t += tick
         # Runaway-clock guard — hoisted so every tick (including empty-ready
         # ticks and stalled backlogs) hits it before any scheduling work.
@@ -302,15 +577,27 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
             ready.extend(by_arrival[idx:j].tolist())
             idx = j
         if not ready:
+            if idx >= N:
+                # Dispatch is done; only the pending chaos timeline keeps
+                # the loop alive.  Jump to the next event and apply it
+                # against in-flight work — a loss's re-queues repopulate
+                # the ready queue and dispatch resumes.
+                if not evq:
+                    break
+                t = max(t, float(evq[0][0]))
+                while evq and evq[0][0] <= t:
+                    _, _, kind, e = heapq.heappop(evq)
+                    _apply_event(kind, e)
             continue
 
-        if elastic:
+        if dynamic:
             # Scripted timeline first, then the closed-loop controller.
-            # Resizes between mapping events apply lazily at the next one —
-            # commits only happen here, so the timelines are equivalent.
-            while ev_i < len(events) and events[ev_i].t <= t:
-                _apply(events[ev_i])
-                ev_i += 1
+            # Resizes/failures between mapping events apply lazily at the
+            # next one — commits only happen here, so the timelines are
+            # equivalent.
+            while evq and evq[0][0] <= t:
+                _, _, kind, e = heapq.heappop(evq)
+                _apply_event(kind, e)
             if controller is not None:
                 if p95_enabled:
                     # commits arrive in time order: prune the stale prefix
@@ -328,6 +615,15 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
                                         backlog_s=backlog, p95_s=p95)
                 if ev is not None:
                     _apply(ev)
+                if hasattr(controller, "observe_stragglers"):
+                    # Per-replica backlog rail → controller straggler
+                    # detection (threshold × fleet median, per-replica
+                    # backoff) → re-queue the flagged replicas' queued work.
+                    flagged = controller.observe_stragglers(
+                        t, [r.name for r in replicas],
+                        [max(f - t, 0.0) for f in free_at])
+                    if flagged:
+                        _remap_stragglers(flagged)
 
         if tracer is not None:
             # Queue-depth timeline on the *simulated* clock: Perfetto renders
@@ -358,12 +654,15 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
                 leftovers.append(ready[k])
                 continue
             committed = True
+            commits_total += 1
             f = free_at[p]
             start = f if f > t else t            # arrivals are all <= t
             fin = start + ex_rows[k][p]
             free_at[p] = fin
             busy[p] += ex_rows[k][p]
             finish_all[ready[k]] = fin
+            start_all[ready[k]] = start
+            assigned_name[ready[k]] = replicas[p].name
             if p95_enabled:
                 done_lat.append((t, fin - arrivals[ready[k]]))
         if metrics is not None:
@@ -375,13 +674,14 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
         if not committed:
             # Nothing schedulable this event.  With no arrivals left the
             # backlog can never drain by itself — but a pending scripted
-            # resize may still make it schedulable, so jump to the next
-            # event's time instead of giving up; with nothing pending,
-            # fast-forward into the guard.  (With arrivals pending the next
-            # tick re-maps as usual.)
+            # resize (or a failure-window recovery unmasking the fleet) may
+            # still make it schedulable, so jump to the next event's time
+            # instead of giving up; with nothing pending, fast-forward into
+            # the guard.  (With arrivals pending the next tick re-maps as
+            # usual.)
             if idx >= N:
-                if ev_i < len(events):
-                    t = max(t, float(events[ev_i].t))
+                if evq:
+                    t = max(t, float(evq[0][0]))
                 else:
                     t = guard_end
             continue
@@ -389,10 +689,34 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
     served = np.isfinite(finish_all)
     offered = N / (arrivals.max() + 1e-9)
 
+    # Recovery invariant — the "provable" in provable recovery.  Every
+    # commit either ends served or was re-queued (so served + requeued +
+    # unserved partition the request set exactly), no unserved request
+    # still holds an assignment, and no served request outlived its
+    # replica's loss instant.  A silently dropped request is a crash here,
+    # not a statistic.
+    n_served = int(served.sum())
+    if commits_total - requeues_total != n_served:
+        raise AssertionError(
+            f"recovery invariant violated: {commits_total} commits - "
+            f"{requeues_total} requeues != {n_served} served")
+    orphans = [rid for rid in np.nonzero(~served)[0].tolist()
+               if assigned_name[rid] is not None]
+    if orphans:
+        raise AssertionError(
+            f"recovery invariant violated: unserved requests still hold "
+            f"assignments: {orphans[:8]}")
+    ghosts = [rid for rid in np.nonzero(served)[0].tolist()
+              if assigned_name[rid] in lost_at
+              and finish_all[rid] > lost_at[assigned_name[rid]]]
+    if ghosts:
+        raise AssertionError(
+            f"recovery invariant violated: served requests outlive their "
+            f"replica's loss: {ghosts[:8]}")
+
     def _final_metrics(util):
         if metrics is None:
             return
-        n_served = int(served.sum())
         metrics.counter("serve.served").inc(n_served)
         metrics.counter("serve.unserved").inc(N - n_served)
         for rep, u in zip(replicas, util):
@@ -408,19 +732,39 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
                            p50_latency=np.nan, p99_latency=np.nan,
                            mean_latency=np.nan,
                            replica_util=np.zeros(len(replicas)),
-                           served_mask=served)
+                           served_mask=served, requeued=requeued_ct,
+                           finish_times=finish_all,
+                           final_avail=np.asarray(free_at, dtype=float))
     lat = finish_all[served] - arrivals[served]
     span = np.nanmax(finish_all) - arrivals.min()
     _final_metrics(np.array(busy) / span)
     return ServeResult(
         offered_rps=offered,
-        achieved_rps=int(served.sum()) / span,
+        achieved_rps=n_served / span,
         p50_latency=float(np.percentile(lat, 50)),
         p99_latency=float(np.percentile(lat, 99)),
         mean_latency=float(lat.mean()),
         replica_util=np.array(busy) / span,
         served_mask=served,
+        requeued=requeued_ct,
+        finish_times=finish_all,
+        final_avail=np.asarray(free_at, dtype=float),
     )
+
+
+def goodput(result: ServeResult, requests: list[Request],
+            slo_s: float) -> int:
+    """Requests served within their SLO deadline (``arrival + slo_s``).
+
+    The chaos tier's acceptance metric: a re-queued request that still
+    lands inside its deadline counts; one pushed past it (or never served)
+    does not — so goodput under a failure trace measures recovery quality,
+    not just liveness.
+    """
+    arr = np.array([r.arrival for r in requests])
+    lat = result.finish_times - arr
+    with np.errstate(invalid="ignore"):          # NaN finish = not served
+        return int(np.sum(result.served_mask & (lat <= slo_s)))
 
 
 def default_fleet() -> list[Replica]:

@@ -23,7 +23,7 @@ from __future__ import annotations
 import contextlib
 import math
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -135,6 +135,27 @@ class ServeEngine:
                     caches = jax.tree.map(
                         lambda x: jnp.asarray(np.asarray(x)), caches)
             return caches
+
+    def snapshot_caches(self, caches):
+        """Host-side snapshot of an in-flight KV/state cache tree.
+
+        This is the chaos tier's recovery unit: taken at a committed decode
+        step (between :meth:`step` calls), the snapshot outlives the
+        replica's process — kill the engine mid-generation and
+        :meth:`restore_caches` re-materializes the same step onto a spare
+        slice, token-identical from the last committed token.
+        """
+        with _span(self.tracer, "engine.snapshot"):
+            return jax.tree.map(lambda x: np.asarray(x), caches)
+
+    def restore_caches(self, caches):
+        """Re-materialize a :meth:`snapshot_caches` tree onto this replica's
+        slice (its ``replica_pspecs`` cache layout via ``reshard_tree``;
+        plain device residency unmeshed)."""
+        with self._ctx(), _span(self.tracer, "engine.restore"):
+            if self._cache_sh is not None:
+                return reshard_tree(caches, self._cache_sh)
+            return jax.tree.map(jnp.asarray, caches)
 
     @property
     def mesh_shape(self) -> tuple[int, ...] | None:
@@ -269,6 +290,7 @@ class HeftFrontEnd:
     cost_registry: object | None = None
     tracer: object | None = None      # repro.obs.Tracer: decision spans
     metrics: object | None = None     # repro.obs.MetricsRegistry
+    unreachable: set = field(default_factory=set)   # chaos partition mask
 
     # -- dynamic handle registry (elastic fleet) ----------------------------
 
@@ -281,6 +303,7 @@ class HeftFrontEnd:
         self.replicas.append(handle)
         if self.fabric is not None:
             self.fabric.grow(len(self.replicas), avail=handle.avail_at)
+        self._sync_mask()
 
     def remove_replica(self, name: str) -> ReplicaHandle:
         """Retire a replica by name (in-flight work finishes; no new
@@ -294,7 +317,28 @@ class HeftFrontEnd:
         if self.fabric is not None:
             self.fabric.shrink([i for i in range(len(self.replicas) + 1)
                                 if i != idx])
+        self.unreachable.discard(name)
+        self._sync_mask()
         return handle
+
+    def set_unreachable(self, names) -> None:
+        """Chaos-tier partition mask: replicas in ``names`` stop receiving
+        *new* work (their Exec_TID columns dispatch as ``+inf``, and an
+        attached fabric's PE mask follows) while in-flight generations and
+        committed ``T_avail`` registers stay intact for recovery.  Pass an
+        empty iterable to clear.  Names not in the roster are ignored —
+        a partition can outlive the replicas behind it."""
+        self.unreachable = set(names)
+        self._sync_mask()
+
+    def _sync_mask(self) -> None:
+        # Fabric resizes clear the lane mask (indices change meaning), so
+        # every roster/mask change re-derives it from replica names.
+        if self.fabric is None:
+            return
+        mask = np.array([r.name in self.unreachable for r in self.replicas],
+                        dtype=bool)
+        self.fabric.set_pe_mask(mask if mask.any() else None)
 
     def estimate_s(self, prompt_len: int, new_tokens: int,
                    replica: ReplicaHandle) -> float:
@@ -308,6 +352,9 @@ class HeftFrontEnd:
         dc = np.array([nt for _, nt in requests], dtype=np.float64)
         cols = []
         for r in self.replicas:
+            if r.name in self.unreachable:
+                cols.append(np.full(len(requests), np.inf))
+                continue
             col = (self.cost_registry.column_s(r, pf, dc)
                    if self.cost_registry is not None else None)
             if col is None:

@@ -1,0 +1,675 @@
+"""Chaos tier: topology-aware failure injection + provable recovery.
+
+Covers the tentpole claims:
+
+* an empty/None failure timeline leaves ``simulate_serving`` bit-identical
+  to the failure-free simulator (property-tested across seeds × policies),
+* any legal interleaving of Resize+Failure events (split/merge/grow beside
+  loss/straggler windows, with a cooldown-limited controller in the loop)
+  replays to the same final ``T_avail`` and served set,
+* ``replica_loss`` re-queues every unfinished request through the mapping
+  policy — never dropped, exempt from the retry budget, and losses striking
+  *after* the last dispatch still drain against in-flight work,
+* straggler windows stretch-and-restore bit-exact (analytic mirror), and
+  the controller's backlog-median detector remaps flagged replicas under
+  exponential backoff bounded by the per-request retry budget,
+* the :class:`Topology` contention/degrade/partition model: concurrent
+  flows serialize on shared links, partitions delay (never drop) transfers
+  and mask unreachable replicas' columns for the window,
+* the fabric PE mask dispatches exactly like the oracle on a masked matrix,
+* failure/recovery/requeue events land on the Tracer/MetricsRegistry rails
+  without perturbing the simulation,
+* real-engine recovery: a ``ServeEngine`` subprocess is SIGKILLed
+  mid-generation and a spare slice restores its snapshot via
+  ``restore_caches`` (``reshard_tree``), token-identical from the last
+  committed step.
+"""
+
+import signal
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from _subproc import run_sub as _run_sub
+
+from repro.sched_integration import (
+    FAILURE_KINDS,
+    FailureEvent,
+    FleetController,
+    FleetControllerConfig,
+    MappingFabric,
+    POLICIES,
+    Replica,
+    Request,
+    ResizeEvent,
+    ServeResult,
+    Topology,
+    default_fleet,
+    fully_connected,
+    goodput,
+    grown_replica_factory,
+    load_failure_timeline,
+    make_requests,
+    make_spike_requests,
+    merge_event,
+    mesh_fleet,
+    migration_bytes,
+    parse_link_target,
+    simulate_serving,
+    spine_topology,
+    split_event,
+    validate_failure_timeline,
+)
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _slow_fleet(n=2):
+    """Replicas with multi-second service times (roofline at 7e9 params), so
+    failure windows overlap in-flight work without huge request counts."""
+    return [Replica(f"r{i}", 50.0, 500.0) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# empty timeline == failure-free simulator (bit-identity, property)
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1),
+       policy=st.sampled_from(sorted(POLICIES)))
+def test_empty_failure_timeline_bit_identical(seed, policy):
+    """failure_events=[] (plus an inert topology and a retry budget) leaves
+    every code path untouched: all result fields match the plain simulator
+    bit-for-bit, for every dispatch policy."""
+    reqs = make_requests(rate_rps=300, duration_s=1.0, seed=seed)
+    topo = fully_connected(["gw", "pod0"], 100.0, gateway="gw")
+    a = simulate_serving(default_fleet(), reqs, POLICIES[policy](),
+                         active_params=7e9)
+    b = simulate_serving(default_fleet(), reqs, POLICIES[policy](),
+                         active_params=7e9, failure_events=[],
+                         topology=topo, retry_budget=1)
+    assert a.mean_latency == b.mean_latency
+    assert a.p50_latency == b.p50_latency
+    assert a.p99_latency == b.p99_latency
+    assert a.achieved_rps == b.achieved_rps
+    np.testing.assert_array_equal(a.replica_util, b.replica_util)
+    np.testing.assert_array_equal(a.served_mask, b.served_mask)
+    np.testing.assert_array_equal(a.finish_times, b.finish_times)
+    np.testing.assert_array_equal(a.final_avail, b.final_avail)
+    assert b.requeued.sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# Resize + Failure interleavings replay to the same state (property)
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_resize_failure_interleaving_replay_reaches_same_state(seed):
+    """A split/merge/grow resize timeline interleaved with loss + straggler
+    failures, with a cooldown-limited controller in the loop: a host-mirror
+    replay (fresh controller/policy, timelines handed over in shuffled
+    order) reaches the same final T_avail, served set, re-queue counts, and
+    utilization — the unified event queue canonicalizes (t, kind) order, so
+    the outcome is a function of the timeline, not of how it was fed in.
+    Losses are re-queued, never dropped: everything ends served."""
+    rng = np.random.default_rng(seed)
+    # Distinct f32-grid event times in (0, 5): same-t collisions *within* a
+    # timeline would make input order semantically significant.
+    times = np.sort(rng.choice(np.arange(1, 40), size=5, replace=False)) / 8.0
+    strag_dur = float(rng.integers(1, 8)) / 4.0
+    strag_fac = float(rng.integers(2, 5))
+    reqs = make_spike_requests(2.0, 25.0, spike_start=0.5, spike_end=1.5,
+                               duration_s=5.0, seed=int(seed % 997))
+
+    def run(shuffle):
+        base = mesh_fleet("a", ((4, 4), (4, 4), (2, 2)))
+        se = split_event(float(times[0]), base[1], [(2, 4), (2, 4)])
+        grow = ResizeEvent(float(times[1]),
+                           add=(mesh_fleet("a", ((2, 4),))[0],))
+        me = merge_event(float(times[3]), se.add, (4, 4))
+        resizes = [se, grow, me]
+        fails = [
+            FailureEvent(float(times[2]), "replica_loss", base[0].name),
+            FailureEvent(float(times[4]), "straggler", base[2].name,
+                         duration_s=strag_dur, factor=strag_fac),
+        ]
+        if shuffle:
+            srng = np.random.default_rng(seed + 1)
+            resizes = [resizes[i] for i in srng.permutation(len(resizes))]
+            fails = [fails[i] for i in srng.permutation(len(fails))]
+        ctl = FleetController(
+            FleetControllerConfig(grow_backlog_s=2.0, cooldown_s=0.5,
+                                  max_grown=1, straggler_factor=4.0),
+            grown_replica_factory("a", (2, 2)))
+        return simulate_serving(base, reqs, POLICIES["heft_rt"](),
+                                active_params=7e9, fleet_events=resizes,
+                                failure_events=fails, controller=ctl)
+
+    a, b = run(False), run(True)
+    np.testing.assert_array_equal(a.final_avail, b.final_avail)
+    np.testing.assert_array_equal(a.served_mask, b.served_mask)
+    np.testing.assert_array_equal(a.requeued, b.requeued)
+    np.testing.assert_array_equal(a.finish_times, b.finish_times)
+    np.testing.assert_array_equal(a.replica_util, b.replica_util)
+    assert a.served_mask.all()
+
+
+# ---------------------------------------------------------------------------
+# replica_loss: re-queued through the policy, never dropped
+# ---------------------------------------------------------------------------
+
+def test_replica_loss_requeues_unfinished_work():
+    reqs = make_requests(rate_rps=20, duration_s=0.5, seed=3)
+    loss = [FailureEvent(0.3, "replica_loss", "r1", reason="pod down")]
+    r = simulate_serving(_slow_fleet(), reqs, POLICIES["heft_rt"](),
+                         active_params=7e9, failure_events=loss)
+    assert r.served_mask.all()
+    assert r.requeued.sum() > 0
+    assert r.replica_util.shape == (1,)      # final roster: the survivor
+    # Nothing served attributes to the dead replica past the loss instant:
+    # the in-sim invariant already raises on that, so reaching here with all
+    # requests served *is* the recovery proof.
+
+
+def test_loss_after_last_dispatch_drains_in_flight_work():
+    """A loss striking after the final mapping event (backlog still in
+    flight) re-queues through the drain branch and dispatch resumes."""
+    reqs = make_requests(rate_rps=20, duration_s=0.5, seed=3)
+    clean = simulate_serving(_slow_fleet(), reqs, POLICIES["heft_rt"](),
+                             active_params=7e9)
+    assert np.nanmax(clean.finish_times) > 2.0   # work is in flight at t=2
+    loss = [FailureEvent(2.0, "replica_loss", "r1")]
+    r = simulate_serving(_slow_fleet(), reqs, POLICIES["heft_rt"](),
+                         active_params=7e9, failure_events=loss)
+    assert r.served_mask.all() and r.requeued.sum() > 0
+
+
+def test_loss_requeues_are_exempt_from_retry_budget():
+    reqs = make_requests(rate_rps=20, duration_s=0.5, seed=3)
+    loss = [FailureEvent(0.3, "replica_loss", "r1")]
+    r = simulate_serving(_slow_fleet(), reqs, POLICIES["heft_rt"](),
+                         active_params=7e9, failure_events=loss,
+                         retry_budget=0)
+    assert r.served_mask.all() and r.requeued.sum() > 0
+
+
+def test_loss_emptying_the_fleet_raises():
+    reqs = make_requests(rate_rps=20, duration_s=0.3, seed=1)
+    with pytest.raises(ValueError, match="left the fleet empty"):
+        simulate_serving(_slow_fleet(1), reqs, POLICIES["heft_rt"](),
+                         active_params=7e9,
+                         failure_events=[FailureEvent(0.2, "replica_loss",
+                                                      "r0")])
+
+
+def test_exec_matrix_allowed_with_loss_rejected_with_windowed_kinds():
+    """A pinned exec matrix composes with pure replica_loss timelines (only
+    columns are deleted) but not with kinds that must *restore* columns."""
+    fleet = _slow_fleet()
+    reqs = make_requests(rate_rps=20, duration_s=0.5, seed=1)
+    ex = np.full((len(reqs), 2), 0.25)
+    r = simulate_serving(fleet, reqs, POLICIES["heft_rt"](),
+                         active_params=7e9, exec_matrix=ex,
+                         failure_events=[FailureEvent(0.3, "replica_loss",
+                                                      "r1")])
+    assert r.served_mask.all()
+    with pytest.raises(ValueError, match="pinned exec_matrix"):
+        simulate_serving(fleet, reqs, POLICIES["heft_rt"](),
+                         active_params=7e9, exec_matrix=ex,
+                         failure_events=[FailureEvent(
+                             0.3, "straggler", "r1", duration_s=0.5,
+                             factor=2.0)])
+
+
+def test_link_kinds_require_topology():
+    reqs = make_requests(rate_rps=20, duration_s=0.3, seed=1)
+    with pytest.raises(ValueError, match="need a topology"):
+        simulate_serving(_slow_fleet(), reqs, POLICIES["heft_rt"](),
+                         active_params=7e9,
+                         failure_events=[FailureEvent(
+                             0.1, "link_partition", "pod0:spine",
+                             duration_s=0.5)])
+
+
+# ---------------------------------------------------------------------------
+# straggler windows: stretch + bit-exact restore
+# ---------------------------------------------------------------------------
+
+def test_straggler_stretch_matches_analytic_mirror():
+    """Single replica, single in-flight request: the stretched finish is
+    exactly ``pivot + k*(f - pivot)``, and a window closing before that
+    un-stretches the tail to ``tr + (f' - tr)/k`` — float-for-float."""
+    fleet = [Replica("solo", 50.0, 500.0)]
+    reqs = [Request(0, 0.0, 1000, 100)]
+    f0 = simulate_serving(fleet, reqs, POLICIES["heft_rt"](),
+                          active_params=7e9).finish_times[0]
+    k, ts = 3.0, 0.5
+    assert ts < f0
+
+    # Window outlives the stretched finish: pure stretch.
+    long_w = FailureEvent(ts, "straggler", "solo", duration_s=1e3, factor=k)
+    r1 = simulate_serving(fleet, reqs, POLICIES["heft_rt"](),
+                          active_params=7e9, failure_events=[long_w])
+    f1 = ts + k * (f0 - ts)
+    assert r1.finish_times[0] == f1
+
+    # Window closes mid-request: the tail past the recovery un-stretches.
+    dur = 0.5 * (f1 - ts)                     # recovery lands inside [ts, f1]
+    tr = ts + dur
+    short_w = FailureEvent(ts, "straggler", "solo", duration_s=dur, factor=k)
+    r2 = simulate_serving(fleet, reqs, POLICIES["heft_rt"](),
+                          active_params=7e9, failure_events=[short_w])
+    assert r2.finish_times[0] == tr + (f1 - tr) / k
+
+
+def test_straggler_window_with_no_overlapping_work_leaves_no_trace():
+    """A window that opens after all work has finished stretches nothing and
+    restores the exec column bit-exact: the run equals the failure-free one
+    in every field."""
+    reqs = make_requests(rate_rps=100, duration_s=0.5, seed=2)
+    a = simulate_serving(default_fleet(), reqs, POLICIES["heft_rt"](),
+                         active_params=7e9)
+    assert np.nanmax(a.finish_times) < 50.0
+    w = FailureEvent(50.0, "straggler", "v4-128", duration_s=1.0, factor=8.0)
+    b = simulate_serving(default_fleet(), reqs, POLICIES["heft_rt"](),
+                         active_params=7e9, failure_events=[w])
+    np.testing.assert_array_equal(a.finish_times, b.finish_times)
+    np.testing.assert_array_equal(a.replica_util, b.replica_util)
+    np.testing.assert_array_equal(a.final_avail, b.final_avail)
+    assert a.p99_latency == b.p99_latency
+
+
+def test_controller_straggler_detection_backoff_and_reset():
+    ctl = FleetController(
+        FleetControllerConfig(straggler_factor=2.0,
+                              straggler_min_backlog_s=0.1,
+                              straggler_cooldown_s=1.0),
+        grown_replica_factory("a", (2, 2)))
+    names = ["a", "b", "c"]
+    hot = [0.1, 0.1, 5.0]
+    assert ctl.observe_stragglers(0.0, names, hot) == ["c"]
+    assert ctl.observe_stragglers(0.5, names, hot) == []     # backing off
+    assert ctl.observe_stragglers(1.0, names, hot) == ["c"]  # backoff now 2s
+    assert ctl.observe_stragglers(2.0, names, hot) == []
+    # Observed healthy: backoff history forgiven, flags fire fresh again.
+    assert ctl.observe_stragglers(2.5, names, [0.1, 0.1, 0.1]) == []
+    assert ctl.observe_stragglers(2.6, names, hot) == ["c"]
+    assert [k for _, k, _ in ctl.trace] == ["remap"] * 3
+    # Disabled detector / single replica: never flags.
+    assert FleetController(FleetControllerConfig(),
+                           grown_replica_factory("a", (2, 2))
+                           ).observe_stragglers(0.0, names, hot) == []
+    assert ctl.observe_stragglers(9.9, ["a"], [99.0]) == []
+
+
+def test_straggler_remap_requeues_within_retry_budget():
+    """A hard straggler window under load: the controller flags it off the
+    backlog-median signal and its queued work re-queues onto the healthy
+    fleet — each request at most retry_budget times.  Small requests keep
+    the backlog rail smooth, so the median comparison sees the ×16 window
+    and not single-request lumpiness."""
+    reqs = make_requests(rate_rps=200, duration_s=1.0, seed=5,
+                         prefill_range=(128, 512), decode_range=(8, 32))
+    w = FailureEvent(0.5, "straggler", "r3", duration_s=60.0, factor=16.0)
+    ctl = FleetController(
+        FleetControllerConfig(grow_backlog_s=float("inf"),
+                              straggler_factor=2.0,
+                              straggler_min_backlog_s=0.5,
+                              straggler_cooldown_s=0.25),
+        grown_replica_factory("a", (2, 2)))
+    r = simulate_serving(_slow_fleet(4), reqs, POLICIES["heft_rt"](),
+                         active_params=7e9, failure_events=[w],
+                         controller=ctl, retry_budget=2)
+    assert "remap" in [k for _, k, _ in ctl.trace]
+    assert r.requeued.sum() > 0
+    assert r.requeued.max() <= 2             # bounded by the retry budget
+    assert r.served_mask.all()
+    # The remap is load-bearing: without it the straggler's queue rides out
+    # the whole ×16 window.
+    passive = simulate_serving(_slow_fleet(4), reqs, POLICIES["heft_rt"](),
+                               active_params=7e9, failure_events=[w])
+    assert r.p99_latency < passive.p99_latency
+
+
+# ---------------------------------------------------------------------------
+# topology: contention, degrade, partition
+# ---------------------------------------------------------------------------
+
+def test_link_target_parsing_and_validation():
+    assert parse_link_target("b:a") == ("a", "b")
+    for bad in ("a", "a:", ":b", "a:b:c"):
+        with pytest.raises(ValueError, match="podA:podB"):
+            parse_link_target(bad)
+    topo = Topology()
+    with pytest.raises(ValueError, match="self-link"):
+        topo.connect("a", "a", 1.0)
+    with pytest.raises(ValueError, match="bandwidth"):
+        topo.connect("a", "b", 0.0)
+    with pytest.raises(KeyError):
+        topo.link("a", "b")
+
+
+def test_transfer_contention_serializes_shared_links():
+    topo = spine_topology(["a", "b", "c"], 10.0, latency_s=0.001)
+    # 1 GB over 10 GB/s + 2 hops of latency.
+    s1, f1 = topo.transfer_s(1e9, "a", "b", at=0.0)
+    assert s1 == 0.0 and f1 == pytest.approx(0.102)
+    # A second flow sharing the a:spine link queues behind the first...
+    s2, f2 = topo.transfer_s(1e9, "a", "c", at=0.0)
+    assert s2 == f1 and f2 == pytest.approx(f1 + 0.102)
+    # ...while a disjoint-path flow does not (b:spine freed at f1).
+    s3, _ = topo.transfer_s(1e9, "b", "c", at=f2)
+    assert s3 == f2
+    # reserve=False probes without committing the wire.
+    topo2 = spine_topology(["a", "b"], 10.0)
+    topo2.transfer_s(1e9, "a", "b", at=0.0, reserve=False)
+    assert topo2.transfer_s(1e9, "a", "b", at=0.0)[0] == 0.0
+
+
+def test_degrade_and_background_util_scale_bandwidth():
+    topo = fully_connected(["a", "b"], 10.0)
+    assert topo.transfer_s(1e9, "a", "b", reserve=False)[1] == pytest.approx(0.1)
+    topo.degrade("a", "b", 0.5)
+    assert topo.transfer_s(1e9, "a", "b", reserve=False)[1] == pytest.approx(0.2)
+    topo.set_background_util("a", "b", 0.5)    # collectives hold half the wire
+    assert topo.transfer_s(1e9, "a", "b", reserve=False)[1] == pytest.approx(0.4)
+    topo.restore("a", "b")
+    topo.set_background_util("a", "b", 0.0)
+    assert topo.transfer_s(1e9, "a", "b", reserve=False)[1] == pytest.approx(0.1)
+    with pytest.raises(ValueError, match="degrade factor"):
+        topo.degrade("a", "b", 0.0)
+    with pytest.raises(ValueError, match="background_util"):
+        topo.set_background_util("a", "b", 1.0)
+
+
+def test_partition_delays_transfers_and_masks_reachability():
+    topo = spine_topology(["gw", "pod0"], 10.0, pod_of={"r0": "pod0"},
+                          gateway="gw")
+    topo.set_down("gw", "spine", 2.0)
+    assert not topo.replica_reachable("r0", at=1.0)
+    assert topo.replica_reachable("r0", at=2.0)
+    assert topo.replica_reachable("unmapped", at=1.0)   # masking is opt-in
+    # A transfer into the window waits it out — delayed, never dropped.
+    s, f = topo.transfer_s(1e9, "gw", "pod0", at=1.0)
+    assert s == 2.0 and f == pytest.approx(2.1)
+    # set_down extends, never shrinks, an open window.
+    topo.set_down("gw", "spine", 1.0)
+    assert topo.link("gw", "spine").down_until == 2.0
+
+
+def test_collective_contends_with_migration_on_shared_links():
+    topo = spine_topology(["a", "b", "c"], 10.0)
+    _, fm = topo.transfer_s(1e9, "a", "b", at=0.0)     # migration holds a:spine
+    s, f = topo.collective_s(1e9, ["a", "b", "c"], at=0.0)
+    per_hop = 2.0 * 1e9 * 2 / 3
+    assert s >= 0.0 and f >= fm + per_hop / 10e9       # a-hop queued behind it
+    assert topo.collective_s(1e9, ["a"], at=3.0) == (3.0, 3.0)
+
+
+def test_topology_joiner_pays_migration_horizon():
+    """A ResizeEvent joiner behind a topology gateway opens its queue
+    horizon at its params migration's finish, not instantly."""
+    topo = spine_topology(["gw", "podj"], 10.0, pod_of={"joiner": "podj"},
+                          gateway="gw")
+    reqs = make_requests(rate_rps=20, duration_s=0.5, seed=2)
+    joiner = Replica("joiner", 50.0, 500.0)
+    r = simulate_serving(_slow_fleet(1), reqs, POLICIES["heft_rt"](),
+                         active_params=7e9,
+                         fleet_events=[ResizeEvent(0.2, add=(joiner,))],
+                         topology=topo)
+    assert r.served_mask.all()
+    # gw → spine → podj at 10 GB/s: a 2-byte/param bf16 copy of 7e9 params.
+    assert r.final_avail[-1] >= 0.2 + migration_bytes(7e9) / 10e9
+
+
+def test_partition_diverts_new_admissions_and_recovers():
+    pod_of = {"r0": "pod0", "r1": "pod1"}
+    reqs = make_requests(rate_rps=20, duration_s=1.0, seed=4)
+
+    def run(duration_s):
+        topo = spine_topology(["gw", "pod0", "pod1"], 100.0, pod_of=pod_of,
+                              gateway="gw")
+        ev = [FailureEvent(0.0, "link_partition", "pod1:spine",
+                           duration_s=duration_s)]
+        return simulate_serving(_slow_fleet(), reqs, POLICIES["heft_rt"](),
+                                active_params=7e9, failure_events=ev,
+                                topology=topo)
+
+    whole_run = run(1e3)
+    assert whole_run.served_mask.all()       # survivors absorb everything
+    assert whole_run.replica_util[1] == 0.0  # r1 never admitted new work
+    windowed = run(0.3)
+    assert windowed.served_mask.all()
+    assert windowed.replica_util[1] > 0.0    # window closed: r1 back in
+
+
+# ---------------------------------------------------------------------------
+# FailureEvent / timeline schema validation
+# ---------------------------------------------------------------------------
+
+def test_failure_event_knob_validation():
+    with pytest.raises(ValueError, match="failure kind"):
+        FailureEvent(0.0, "meteor", "r0")
+    with pytest.raises(ValueError, match="no target"):
+        FailureEvent(0.0, "replica_loss", "")
+    with pytest.raises(ValueError, match="duration_s"):
+        FailureEvent(0.0, "straggler", "r0", factor=2.0)
+    with pytest.raises(ValueError, match="factor must be > 1"):
+        FailureEvent(0.0, "straggler", "r0", duration_s=1.0, factor=0.5)
+    with pytest.raises(ValueError, match=r"in \(0, 1\)"):
+        FailureEvent(0.0, "link_degrade", "a:b", duration_s=1.0, factor=1.5)
+    assert set(FAILURE_KINDS) == {"replica_loss", "straggler",
+                                  "link_degrade", "link_partition"}
+
+
+def test_failure_timeline_schema_validation(tmp_path):
+    good = {"events": [
+        {"t": 0.5, "kind": "replica_loss", "target": "r0", "reason": "x"},
+        {"t": 1.0, "kind": "straggler", "target": "r1",
+         "duration_s": 0.5, "factor": 4.0},
+    ]}
+    evs = validate_failure_timeline(good)
+    assert [e.kind for e in evs] == ["replica_loss", "straggler"]
+    with pytest.raises(ValueError, match="root must be an object"):
+        validate_failure_timeline([])
+    with pytest.raises(ValueError, match="'events' list"):
+        validate_failure_timeline({})
+    with pytest.raises(ValueError, match="unknown keys"):
+        validate_failure_timeline(
+            {"events": [{"t": 0.0, "kind": "replica_loss", "target": "r0",
+                         "severity": 9}]})
+    with pytest.raises(ValueError, match="missing required 'kind'"):
+        validate_failure_timeline({"events": [{"t": 0.0, "target": "r0"}]})
+    with pytest.raises(ValueError, match=r"events\[0\].t must be"):
+        validate_failure_timeline(
+            {"events": [{"t": "soon", "kind": "replica_loss",
+                         "target": "r0"}]})
+    p = tmp_path / "chaos.json"
+    p.write_text('{"events": [{"t": 0.25, "kind": "replica_loss", '
+                 '"target": "r0"}]}')
+    assert load_failure_timeline(str(p))[0].t == 0.25
+
+
+def test_launcher_resolves_unique_prefix_targets():
+    from repro.launch.serve import _resolve_targets
+
+    names = ["replica0(x1.0)", "replica1(x0.7)"]
+    tl = [FailureEvent(0.1, "replica_loss", "replica1"),
+          FailureEvent(0.2, "link_degrade", "pod0:spine", duration_s=1.0,
+                       factor=0.5)]
+    out = _resolve_targets(tl, names)
+    assert out[0].target == "replica1(x0.7)"
+    assert out[1].target == "pod0:spine"          # link targets pass through
+    with pytest.raises(SystemExit, match="matches"):
+        _resolve_targets([FailureEvent(0.1, "replica_loss", "replica")],
+                         names)
+    with pytest.raises(SystemExit, match="no replicas"):
+        _resolve_targets([FailureEvent(0.1, "replica_loss", "ghost")], names)
+
+
+def test_goodput_counts_only_in_slo_serves():
+    reqs = [Request(0, 0.0, 100, 10), Request(1, 0.0, 100, 10),
+            Request(2, 0.5, 100, 10)]
+    res = ServeResult(3.0, 2.0, 0.5, 3.0, 1.75, np.zeros(1),
+                      served_mask=np.array([True, True, False]),
+                      finish_times=np.array([0.5, 3.0, np.nan]))
+    assert goodput(res, reqs, slo_s=1.0) == 1
+    assert goodput(res, reqs, slo_s=10.0) == 2
+
+
+# ---------------------------------------------------------------------------
+# fabric PE mask + front-end partition mask
+# ---------------------------------------------------------------------------
+
+def test_fabric_pe_mask_matches_oracle_on_masked_matrix():
+    rng = np.random.default_rng(7)
+    avg = rng.integers(0, 5, 10).astype(np.float32)
+    ex = rng.integers(1, 16, (10, 4)).astype(np.float32)
+    masked_ex = ex.copy()
+    masked_ex[:, 1] = np.inf
+    fab = MappingFabric(4, backend="numpy")
+    ref = MappingFabric(4, backend="numpy")
+    fab.set_pe_mask([False, True, False, False])
+    got = fab.map_event(avg, ex)
+    want = ref.map_event(avg, masked_ex)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+    np.testing.assert_array_equal(fab.avail, ref.avail)
+    assert fab.avail[1] == 0.0                 # masked lane took no work
+
+
+def test_fabric_pe_mask_validation_and_resize_clearing():
+    fab = MappingFabric(3, backend="numpy")
+    with pytest.raises(ValueError, match="pe mask"):
+        fab.set_pe_mask([True, False])
+    fab.set_pe_mask([True, False, False])
+    fab.grow(4)                                # lane indices change meaning
+    assert fab._pe_mask is None
+    fab.set_pe_mask([True, False, False, False])
+    fab.set_pe_mask(None)
+    assert fab._pe_mask is None
+
+
+def test_front_end_set_unreachable_masks_and_clears():
+    from repro.serve.engine import HeftFrontEnd, ReplicaHandle
+
+    class _Eng:
+        mesh_shape = None
+
+    front = HeftFrontEnd([ReplicaHandle("a", _Eng()),
+                          ReplicaHandle("b", _Eng(), speed=2.0)],
+                         fabric=MappingFabric(2, backend="numpy"))
+    reqs = [(np.zeros(10, np.int32), 4), (np.zeros(6, np.int32), 2)]
+    front.set_unreachable(["a", "ghost"])      # unknown names are ignored
+    assert np.isinf(front.exec_estimates(reqs)[:, 0]).all()
+    assert all(p == 1 for _, p in front.schedule(reqs))
+    front.set_unreachable([])
+    assert front.fabric._pe_mask is None
+    assert np.isfinite(front.exec_estimates(reqs)).all()
+    # Removing a masked replica drops it from the mask with the roster.
+    front.set_unreachable(["b"])
+    front.remove_replica("b")
+    assert front.unreachable == set() and front.fabric._pe_mask is None
+
+
+# ---------------------------------------------------------------------------
+# observability rails
+# ---------------------------------------------------------------------------
+
+def test_chaos_events_land_on_tracer_and_metrics_without_perturbing():
+    from repro.obs import MetricsRegistry, Tracer
+
+    reqs = make_requests(rate_rps=20, duration_s=0.5, seed=3)
+    fails = [FailureEvent(0.3, "replica_loss", "r1", reason="chaos"),
+             FailureEvent(0.5, "straggler", "r0", duration_s=0.5,
+                          factor=2.0)]
+    tracer, metrics = Tracer(), MetricsRegistry()
+    obs = simulate_serving(_slow_fleet(), reqs, POLICIES["heft_rt"](),
+                           active_params=7e9, failure_events=fails,
+                           tracer=tracer, metrics=metrics)
+    plain = simulate_serving(_slow_fleet(), reqs, POLICIES["heft_rt"](),
+                             active_params=7e9, failure_events=fails)
+    np.testing.assert_array_equal(obs.finish_times, plain.finish_times)
+    np.testing.assert_array_equal(obs.final_avail, plain.final_avail)
+    names = {e.name for e in tracer.events()}
+    assert {"serve.failure", "serve.recovery", "serve.requeue",
+            "serve.queue_depth"} <= names
+    assert metrics.counter("serve.failures", kind="replica_loss").value == 1
+    assert metrics.counter("serve.failures", kind="straggler").value == 1
+    assert (metrics.counter("serve.retries", cause="replica_loss").value
+            == plain.requeued.sum())
+    assert metrics.counter("serve.served").value == plain.served_mask.sum()
+
+
+# ---------------------------------------------------------------------------
+# real-engine recovery: SIGKILL mid-generation, restore on a spare slice
+# ---------------------------------------------------------------------------
+
+def test_engine_kill_and_recover_token_identical(tmp_path):
+    """The tentpole's recovery demo: a mesh-backed ServeEngine is SIGKILLed
+    mid-generation after snapshotting its in-flight KV at a committed decode
+    step; a second process restores params + snapshot onto a *different*
+    slice via ``restore_caches`` (``reshard_tree``) and finishes the
+    generation token-identical to an uninterrupted run."""
+    snap = str(tmp_path / "snap.pkl")
+    _run_sub(f"""
+        import os, pickle, signal
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.configs import get_smoke_config
+        from repro.launch.mesh import make_debug_mesh
+        from repro.models.model import init_params
+        from repro.serve import ServeEngine
+
+        cfg = get_smoke_config('deepseek-7b')
+        params = init_params(jax.random.key(0), cfg)
+        pool = jax.devices()
+        eng = ServeEngine(cfg, params, max_len=64,
+                          mesh=make_debug_mesh((2, 1), devices=pool[:2]))
+        rng = np.random.default_rng(0)
+        prompt = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+        logits, caches = eng.start(prompt[None, :])
+        toks = []
+        for i in range(4):
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            toks.append(np.asarray(tok))
+            logits, caches = eng.step(caches, tok[:, None], 12 + i)
+        with open({snap!r}, 'wb') as f:
+            pickle.dump(dict(toks=toks, logits=np.asarray(logits),
+                             snap=eng.snapshot_caches(caches)), f)
+            f.flush(); os.fsync(f.fileno())
+        os.kill(os.getpid(), signal.SIGKILL)   # die mid-generation
+    """, expect_returncode=-signal.SIGKILL)
+    out = _run_sub(f"""
+        import pickle
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.configs import get_smoke_config
+        from repro.launch.mesh import make_debug_mesh
+        from repro.models.model import init_params
+        from repro.serve import ServeEngine
+
+        cfg = get_smoke_config('deepseek-7b')
+        params = init_params(jax.random.key(0), cfg)   # same init seed
+        pool = jax.devices()
+        # The spare slice: different devices AND a different shape — the
+        # snapshot reshards onto the new cache layout.
+        eng = ServeEngine(cfg, params, max_len=64,
+                          mesh=make_debug_mesh((2, 2), devices=pool[4:8]))
+        rng = np.random.default_rng(0)
+        prompt = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+        want = eng.generate(prompt[None, :], 8)        # uninterrupted run
+        with open({snap!r}, 'rb') as f:
+            saved = pickle.load(f)
+        caches = eng.restore_caches(saved['snap'])
+        logits, toks = jnp.asarray(saved['logits']), list(saved['toks'])
+        for i in range(4, 8):
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            toks.append(np.asarray(tok))
+            logits, caches = eng.step(caches, tok[:, None], 12 + i)
+        got = np.concatenate([t[:, None] for t in toks], axis=1)
+        assert np.array_equal(got, want[:, 12:]), (got, want[:, 12:])
+        print('OK')
+    """)
+    assert "OK" in out
