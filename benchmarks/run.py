@@ -12,6 +12,7 @@ unit per row).
   bench_frame_rate               Fig 6 (26.7% claim)
   bench_serve_scheduler          beyond-paper: LLM serving fleet
   bench_serve_sharded            beyond-paper: mesh-backed fleet + cost model
+  bench_paged_serve              beyond-paper: continuous batching / paged KV
   bench_mapping_fabric           beyond-paper: fabric-batched mapping events
   bench_train_compress           beyond-paper: int8 pod-compressed train step
   bench_elastic_fleet            beyond-paper: elastic fleet resize events
@@ -61,6 +62,7 @@ MODULES = [
     "bench_frame_rate",
     "bench_serve_scheduler",
     "bench_serve_sharded",
+    "bench_paged_serve",
     "bench_mapping_fabric",
     "bench_train_compress",
     "bench_elastic_fleet",

@@ -305,6 +305,24 @@ def activation_hint_policy(cfg: ModelConfig, ax: MeshAxes,
     return pol
 
 
+def page_pspecs(cfg: ModelConfig, ax: MeshAxes, *, seq_shard: bool = False):
+    """Specs for a ``serve.paging`` page-pool tree (continuous batching).
+
+    Pool leaves have the same rank as their dense cache counterparts — the
+    batch axis becomes the page (or state-slot) axis and ``Smax`` becomes
+    ``page_size`` — so the ``_cache_rule`` name-based specs apply
+    *structurally*: the page dim replicates exactly like the serve-replica
+    batch dim (``batch_shard=False``), ``page_size`` takes whatever the
+    sequence dim would (KV heads stay over ``model``; ``seq_shard=True``
+    moves the flash-decode split onto the page_size dim).  One rule, two
+    layouts — gather/scatter between pool and dense view is then a pure
+    page-axis permutation that GSPMD never reshards for.
+    """
+    shape_cfg = ShapeConfig("serve", "decode", 1, 1)   # structure-only
+    return cache_pspecs(cfg, ax, shape_cfg, seq_shard=seq_shard,
+                        batch_shard=False)
+
+
 def replica_pspecs(cfg: ModelConfig, ax: MeshAxes, *, fsdp: bool = True,
                    seq_shard: bool = False) -> dict:
     """Spec bundle for one mesh-backed serve replica (see serve/engine.py).

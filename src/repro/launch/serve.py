@@ -1,8 +1,16 @@
 """Serving launcher — batched-request demo with the HEFT_RT front end.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --requests 12
+  PYTHONPATH=src python -m repro.launch.serve --paged      # continuous batching
   PYTHONPATH=src python -m repro.launch.serve --sharded    # mesh-backed fleet
   PYTHONPATH=src python -m repro.launch.serve --trace /tmp/serve_trace.json
+
+``--paged`` serves through the block-paged KV pool (``serve/paging.py``):
+requests are HEFT_RT-mapped and then *admitted into the running batch* at
+each decode tick (``--max-batch`` slots, ``--page-size``-token pages;
+``--num-pages`` below full occupancy exercises admission queueing), and
+request 0 is verified token-identical to the dense oracle.  See
+docs/serving.md for the design.
 
 Default mode builds a small heterogeneous "fleet" of replicas of a
 smoke-config model (speed factors emulate mixed pods).  ``--sharded`` carves
@@ -58,6 +66,20 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--replicas", type=int, default=3)
+    ap.add_argument("--paged", action="store_true",
+                    help="continuous batching: serve through the block-paged "
+                         "KV pool (ServeEngine.admit/decode_tick/retire; "
+                         "see docs/serving.md), verifying request 0 "
+                         "token-identical to the dense oracle")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="with --paged: concurrent batch slots per replica")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="with --paged: KV page size in tokens (must divide "
+                         "the engine max_len)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="with --paged: pool pages per replica (default: "
+                         "full occupancy; lower exercises admission "
+                         "queueing)")
     ap.add_argument("--sharded", action="store_true",
                     help="back replicas with mesh slices of the device pool")
     ap.add_argument("--mesh-shapes", default="1x1",
@@ -123,9 +145,28 @@ def main() -> None:
          args.new_tokens)
         for _ in range(args.requests)
     ]
-    (outs, counts), dt = time_s(front.run_batch, requests)
-    log.info(f"{len(outs)} requests in {dt:.2f}s "
-             f"({sum(len(p)+args.new_tokens for p,_ in requests)/dt:.0f} tok/s)")
+    if args.paged:
+        # Continuous batching: requests join/leave the running batch at the
+        # admission tick instead of queueing behind whole generations.
+        (seqs, stats), dt = time_s(
+            front.run_continuous, requests, max_batch=args.max_batch,
+            page_size=args.page_size, num_pages=args.num_pages)
+        outs = [s[None, :] for s in seqs]      # run_batch-shaped, for demos
+        counts = stats["processed"]
+        log.info(f"{len(outs)} requests in {dt:.2f}s paged "
+                 f"({sum(len(p)+args.new_tokens for p,_ in requests)/dt:.0f} "
+                 f"tok/s, {stats['ticks']} ticks, "
+                 f"{stats['allocated']} pages allocated == "
+                 f"{stats['freed']} freed)")
+        oracle = front.replicas[0].engine.generate(requests[0][0][None, :],
+                                                   requests[0][1])
+        if not np.array_equal(outs[0], oracle):
+            raise SystemExit("paged output diverged from the dense oracle")
+        log.info("request 0 verified token-identical to the dense oracle")
+    else:
+        (outs, counts), dt = time_s(front.run_batch, requests)
+        log.info(f"{len(outs)} requests in {dt:.2f}s "
+                 f"({sum(len(p)+args.new_tokens for p,_ in requests)/dt:.0f} tok/s)")
     log.info(f"request distribution (HEFT_RT): {counts}")
     log.info(f"sample output ids: {outs[0][0, -8:].tolist()}")
 

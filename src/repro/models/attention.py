@@ -190,22 +190,37 @@ def decode_attention(
     q: jax.Array,            # (B, 1, H, d)
     k_cache: jax.Array,      # (B, Smax, KV, d)
     v_cache: jax.Array,      # (B, Smax, KV, d)
-    pos: jax.Array,          # () current position (number of valid cache slots)
+    pos: jax.Array,          # () shared position, or (B,) one per sequence
     *,
     scale: float,
     attn_cap: float | None,
     window: int | None,
 ) -> jax.Array:
+    """One-query attention against the cache.
+
+    ``pos`` is the number of valid cache slots: a scalar for lockstep batched
+    decode, or a ``(B,)`` vector for continuous batching, where every row of
+    the batch sits at its own sequence position (serve/paging.py).  Rows are
+    independent either way, so a vector-``pos`` row computes bit-identically
+    to the same request decoded alone with a scalar ``pos``.
+    """
     B, _, H, d = q.shape
     Smax, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
     qg = q.reshape(B, 1, KV, G, d)
     s = _qk_chunk_scores(qg, k_cache, scale, attn_cap)         # (B,KV,G,1,Smax)
     kpos = jnp.arange(Smax)
-    mask = kpos <= pos
-    if window is not None:
-        mask &= (pos - kpos) < window
-    s = jnp.where(mask[None, None, None, None, :], s, NEG)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        mask = kpos <= pos
+        if window is not None:
+            mask &= (pos - kpos) < window
+        s = jnp.where(mask[None, None, None, None, :], s, NEG)
+    else:
+        mask = kpos[None, :] <= pos[:, None]                   # (B, Smax)
+        if window is not None:
+            mask &= (pos[:, None] - kpos[None, :]) < window
+        s = jnp.where(mask[:, None, None, None, :], s, NEG)
     p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
     out = jnp.einsum("bngqk,bknd->bqngd", p, v_cache,
                      preferred_element_type=jnp.float32)
@@ -246,8 +261,18 @@ def gqa_block(
     new_cache = None
     if decode_pos is not None:
         assert cache is not None and S == 1
-        k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), decode_pos, axis=1)
-        v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), decode_pos, axis=1)
+        if jnp.ndim(decode_pos) == 0:
+            k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), decode_pos, axis=1)
+            v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), decode_pos, axis=1)
+        else:
+            # Continuous batching: each row writes its token at its own
+            # position (row-independent scatter — bit-identical per row to
+            # the scalar-pos update of that row alone).
+            rows = jnp.arange(B)
+            k_cache = cache["k"].at[rows, decode_pos].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[rows, decode_pos].set(
+                v[:, 0].astype(cache["v"].dtype))
         out = decode_attention(q, k_cache, v_cache, decode_pos, scale=scale,
                                attn_cap=cfg.attn_softcap, window=window)
         new_cache = {"k": k_cache, "v": v_cache}
@@ -336,10 +361,17 @@ def mla_block(
     new_cache = None
     if decode_pos is not None:
         assert cache is not None and S == 1
-        ckv_c = lax.dynamic_update_slice_in_dim(
-            cache["ckv"], ckv.astype(cache["ckv"].dtype), decode_pos, axis=1)
-        kr_c = lax.dynamic_update_slice_in_dim(
-            cache["kr"], kr.astype(cache["kr"].dtype), decode_pos, axis=1)
+        if jnp.ndim(decode_pos) == 0:
+            ckv_c = lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), decode_pos, axis=1)
+            kr_c = lax.dynamic_update_slice_in_dim(
+                cache["kr"], kr.astype(cache["kr"].dtype), decode_pos, axis=1)
+        else:
+            rows = jnp.arange(B)
+            ckv_c = cache["ckv"].at[rows, decode_pos].set(
+                ckv[:, 0].astype(cache["ckv"].dtype))
+            kr_c = cache["kr"].at[rows, decode_pos].set(
+                kr[:, 0].astype(cache["kr"].dtype))
         # absorbed decode: fold W_UK into q, attend in latent space
         q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, params["w_uk"])  # (B,1,H,R)
         s = (jnp.einsum("bshr,btr->bhst", q_abs, ckv_c,
@@ -347,7 +379,12 @@ def mla_block(
              + jnp.einsum("bshd,btd->bhst", q_rope, kr_c,
                           preferred_element_type=jnp.float32)) * scale
         kpos = jnp.arange(ckv_c.shape[1])
-        s = jnp.where((kpos <= decode_pos)[None, None, None, :], s, NEG)
+        if jnp.ndim(decode_pos) == 0:
+            s = jnp.where((kpos <= decode_pos)[None, None, None, :], s, NEG)
+        else:
+            s = jnp.where(
+                (kpos[None, :] <= decode_pos[:, None])[:, None, None, :],
+                s, NEG)
         p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
         o_lat = jnp.einsum("bhst,btr->bshr", p, ckv_c,
                            preferred_element_type=jnp.float32)       # (B,1,H,R)

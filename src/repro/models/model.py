@@ -116,7 +116,12 @@ def forward(params, tokens, cfg: ModelConfig, *, caches=None, decode_pos=None,
     x = _embed_tokens(params, tokens, cfg)
     x = shard_hint(x, "layer_boundary")
     if decode_pos is not None:
-        positions = jnp.full((S,), decode_pos, dtype=jnp.int32)
+        if jnp.ndim(decode_pos) == 0:
+            positions = jnp.full((S,), decode_pos, dtype=jnp.int32)
+        else:
+            # Per-row decode positions (continuous batching): (B,) → (B, 1),
+            # broadcastable against the (..., S) layout apply_rope expects.
+            positions = decode_pos.astype(jnp.int32)[:, None]
     else:
         positions = jnp.arange(S, dtype=jnp.int32)
     x, new_caches, metrics = apply_stack(
@@ -227,7 +232,10 @@ def prefill_step(params, tokens, cfg: ModelConfig, max_len: int | None = None,
 
 
 def decode_step(params, caches, tokens, pos, cfg: ModelConfig):
-    """One decode step.  tokens (B,1); pos: scalar index of this token.
+    """One decode step.  tokens (B,1); pos: scalar index of this token, or a
+    per-row (B,) int32 vector when rows decode at independent positions
+    (continuous batching).  Rows are independent, so the vector path is
+    bitwise identical per row to running that row alone with a scalar pos.
 
     Returns (logits (B,V), new_caches).
     """

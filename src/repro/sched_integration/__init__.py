@@ -19,6 +19,7 @@ from repro.sched_integration.fabric import (
     eft_dispatch_numpy,
     heft_rt_fast,
     make_policy_fabric,
+    pow2_bucket,
     service_time_matrix,
 )
 from repro.sched_integration.serve_scheduler import (
@@ -60,7 +61,7 @@ __all__ = [
     "CostCell", "CostModelRegistry", "registry_from_dryrun_artifacts",
     "scaled_cell",
     "MappingFabric", "eft_dispatch_numpy", "heft_rt_fast",
-    "make_policy_fabric", "service_time_matrix",
+    "make_policy_fabric", "pow2_bucket", "service_time_matrix",
     "POLICIES", "Replica", "Request", "ServeResult", "default_fleet",
     "goodput", "make_requests", "mesh_fleet", "simulate_serving",
     "FAILURE_KINDS", "FailureEvent", "FleetController",

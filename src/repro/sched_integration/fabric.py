@@ -84,6 +84,19 @@ def default_backend() -> str:
     return "numpy" if jax.default_backend() == "cpu" else "jit"
 
 
+def pow2_bucket(n: int, min_bucket: int = 1) -> int:
+    """Next power of two ≥ ``max(n, min_bucket, 1)``.
+
+    The one bucketing idiom every retrace-bounded dispatch in the repo
+    shares: the fabric's ready-queue/PE padding (:meth:`MappingFabric
+    .bucket_size`) and the paged serve runtime's active-lane padding
+    (``serve.paging``) both compile O(log n_max) shape variants instead of
+    one per dynamic size.
+    """
+    b = max(int(n), int(min_bucket), 1)
+    return 1 << (b - 1).bit_length()
+
+
 # ---------------------------------------------------------------------------
 # Vectorized roofline front-end
 # ---------------------------------------------------------------------------
@@ -492,8 +505,7 @@ class MappingFabric:
 
     def bucket_size(self, n: int) -> int:
         """Next power-of-two bucket ≥ max(n, min_bucket)."""
-        b = max(int(n), self.min_bucket, 1)
-        b = 1 << (b - 1).bit_length()
+        b = pow2_bucket(n, self.min_bucket)
         if b > self.max_bucket:
             raise ValueError(f"queue length {n} exceeds max_bucket={self.max_bucket}")
         return b

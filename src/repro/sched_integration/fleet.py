@@ -210,7 +210,8 @@ def split_event(t: float, rep: Replica, shapes, *, reason: str = "") -> ResizeEv
             f"the replica's {rep.mesh_shape} slice has {n}")
     adds = tuple(
         Replica(f"{rep.name}/s{i}", math.prod(s) * ct, math.prod(s) * hb,
-                arch=rep.arch, mesh_shape=s, ici_gbps=rep.ici_gbps)
+                arch=rep.arch, mesh_shape=s, ici_gbps=rep.ici_gbps,
+                slots=rep.slots)
         for i, s in enumerate(shapes))
     return ResizeEvent(t, add=adds, remove=(rep.name,),
                        reason=reason or f"split {rep.name} -> {shapes}")
@@ -242,7 +243,7 @@ def merge_event(t: float, reps, shape, *, name: str | None = None,
     n = math.prod(shape)
     merged = Replica(name or f"{reps[0].name}/m{'x'.join(map(str, shape))}",
                      n * ct, n * hb, arch=reps[0].arch, mesh_shape=shape,
-                     ici_gbps=reps[0].ici_gbps)
+                     ici_gbps=reps[0].ici_gbps, slots=reps[0].slots)
     return ResizeEvent(t, add=(merged,), remove=tuple(r.name for r in reps),
                        reason=reason or
                        f"merge {[r.name for r in reps]} -> {shape}")

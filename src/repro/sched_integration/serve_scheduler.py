@@ -43,6 +43,12 @@ class Replica:
     dry-run cost-model registry so its Exec_TID column comes from measured
     FLOPs/bytes instead of the analytic roofline; ``ici_gbps`` > 0
     additionally charges the cell's collective wire bytes.
+
+    ``slots`` is the continuous-batching twin of ``ServeEngine.start_paged``
+    (``max_batch``): the replica serves up to ``slots`` requests
+    concurrently, each on its own FIFO chain, and the scheduler-facing
+    availability register is the *earliest-free chain*.  ``slots=1`` (the
+    default) is bit-identical to the original single-chain simulator.
     """
 
     name: str
@@ -51,6 +57,7 @@ class Replica:
     arch: str | None = None              # cost-model key: architecture name
     mesh_shape: tuple[int, ...] | None = None   # cost-model key: mesh slice
     ici_gbps: float = 0.0                # interconnect rate for wire bytes
+    slots: int = 1                       # concurrent batch slots (paged serve)
 
 
 @dataclass(frozen=True)
@@ -280,6 +287,12 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
     end = float(arrivals.max()) + 1.0
     guard_end = end + 3600.0                     # runaway-clock guard horizon
 
+    # Per-replica slot chains (Replica.slots concurrent FIFO chains — the
+    # simulator twin of the paged engine's batch slots).  ``free_at`` stays
+    # the scheduler-facing availability register = min over the replica's
+    # chains; at slots=1 every operation below degenerates to the original
+    # single-chain arithmetic bit-for-bit.
+    slot_free = [[0.0] * max(int(r.slots), 1) for r in replicas]
     free_at = [0.0] * P                          # per-replica queue horizon
     busy = [0.0] * P
     finish_all = np.full(N, np.nan)              # per-request finish (NaN: unserved)
@@ -340,6 +353,7 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
                     f"in {[r.name for r in replicas]}")
             replicas.pop(i)
             free_at.pop(i)
+            slot_free.pop(i)
             busy.pop(i)
             ex_all = np.delete(ex_all, i, axis=1)
         for rep in e.add:
@@ -357,6 +371,7 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
                         migration_bytes(active_params), topology.gateway,
                         pod, at=t)
             free_at.append(horizon)
+            slot_free.append([horizon] * max(int(rep.slots), 1))
             busy.append(0.0)
             lost_at.pop(rep.name, None)    # a re-used name is a new replica
             ex_all = np.concatenate([ex_all, _exec_column(rep)], axis=1)
@@ -433,6 +448,7 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
                     f"replica_loss at t={tl} left the fleet empty")
             replicas.pop(i)
             free_at.pop(i)
+            slot_free.pop(i)
             busy.pop(i)
             ex_all = np.delete(ex_all, i, axis=1)
         grown = getattr(controller, "grown", None)
@@ -459,8 +475,9 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
             finish_all[rid] = pivot + k * (finish_all[rid] - pivot)
             if start_all[rid] > pivot:
                 start_all[rid] = pivot + k * (start_all[rid] - pivot)
-        if free_at[i] > pivot:
-            free_at[i] = pivot + k * (free_at[i] - pivot)
+        slot_free[i] = [pivot + k * (c - pivot) if c > pivot else c
+                        for c in slot_free[i]]
+        free_at[i] = min(slot_free[i])
 
     def _apply_failure(e):
         if tracer is not None:
@@ -513,8 +530,9 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
             finish_all[rid] = tr + (finish_all[rid] - tr) / k
             if start_all[rid] > tr:
                 start_all[rid] = tr + (start_all[rid] - tr) / k
-        if free_at[i] > tr:
-            free_at[i] = tr + (free_at[i] - tr) / k
+        slot_free[i] = [tr + (c - tr) / k if c > tr else c
+                        for c in slot_free[i]]
+        free_at[i] = min(slot_free[i])
         _refresh_column(i)
 
     def _push_seq():
@@ -550,7 +568,16 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
             keep = [finish_all[rid] for rid, an in enumerate(assigned_name)
                     if an == name and rid not in mset]
             _requeue(moved, "straggler")
+            if len(slot_free[i]) > 1:
+                # A multi-slot chain suffix can't be re-attributed to its
+                # chains after the fact — the commit pass doesn't record
+                # which chain a request ran on.  Fail loudly rather than
+                # silently corrupting the horizon.
+                raise ValueError(
+                    f"straggler remap is not supported for multi-slot "
+                    f"replica {name!r} (slots={len(slot_free[i])})")
             free_at[i] = max(keep, default=0.0)
+            slot_free[i] = [free_at[i]]
 
     # With a failure timeline, the loop stays alive past the last dispatch
     # while timeline/recovery events remain: a loss can strike *in-flight*
@@ -655,10 +682,17 @@ def simulate_serving(replicas: list[Replica], requests: list[Request],
                 continue
             committed = True
             commits_total += 1
-            f = free_at[p]
+            # Earliest-free slot chain takes the request (first index on
+            # ties — deterministic); the availability register becomes the
+            # min over chains.  At slots=1 this is exactly the original
+            # f = free_at[p]; ...; free_at[p] = fin left-fold.
+            chains = slot_free[p]
+            j = chains.index(min(chains))
+            f = chains[j]
             start = f if f > t else t            # arrivals are all <= t
             fin = start + ex_rows[k][p]
-            free_at[p] = fin
+            chains[j] = fin
+            free_at[p] = min(chains)
             busy[p] += ex_rows[k][p]
             finish_all[ready[k]] = fin
             start_all[ready[k]] = start
@@ -784,12 +818,13 @@ def default_fleet() -> list[Replica]:
 def mesh_fleet(arch: str = "deepseek-7b",
                mesh_shapes=((16, 16), (16, 16), (4, 16), (4, 4)),
                *, chip_tflops: float = 197.0, chip_hbm_gbps: float = 819.0,
-               ici_gbps: float = 0.0,
+               ici_gbps: float = 0.0, slots: int = 1,
                mfu: float = 0.5, hbm_eff: float = 0.6) -> list[Replica]:
     """A heterogeneous *mesh-backed* fleet: same-generation chips carved into
     mixed mesh slices (the serving analogue of the paper's non-uniform PEs).
     Aggregate rates scale with slice size; ``arch`` + each slice shape key
-    the replicas into the cost-model registry.
+    the replicas into the cost-model registry.  ``slots`` gives every
+    replica that many concurrent batch slots (continuous batching twin).
     """
     import math
 
@@ -800,5 +835,5 @@ def mesh_fleet(arch: str = "deepseek-7b",
         fleet.append(Replica(
             f"{arch}@{'x'.join(map(str, shape))}#{i}",
             n * chip_tflops * mfu, n * chip_hbm_gbps * hbm_eff,
-            arch=arch, mesh_shape=shape, ici_gbps=ici_gbps))
+            arch=arch, mesh_shape=shape, ici_gbps=ici_gbps, slots=slots))
     return fleet

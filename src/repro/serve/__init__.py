@@ -4,5 +4,7 @@ from repro.serve.engine import (
     ServeEngine,
     mesh_backed_fleet,
 )
+from repro.serve.paging import PagePool, PagedRuntime
 
-__all__ = ["HeftFrontEnd", "ReplicaHandle", "ServeEngine", "mesh_backed_fleet"]
+__all__ = ["HeftFrontEnd", "PagePool", "PagedRuntime", "ReplicaHandle",
+           "ServeEngine", "mesh_backed_fleet"]

@@ -16,6 +16,27 @@ Two layers:
   device pool — ``repro.launch.mesh.slice_device_pool``); per-replica
   ``Exec_TID`` estimates come from the dry-run cost-model registry when the
   replica's (arch × mesh) cells are covered, host-scale roofline otherwise.
+
+Public contracts:
+
+* **Dense path** (`generate`, `start`/`step`) — per-request decode against a
+  dense fixed-shape cache; the *bitwise oracle* every other path is tested
+  against.  `reshard(mesh)` migrates a live replica (params + in-flight KV)
+  token-identically; `snapshot_caches`/`restore_caches` are the chaos tier's
+  kill-and-recover unit.
+* **Paged path** (`start_paged` → `admit`/`decode_tick`/`finished_slots`/
+  `retire`) — continuous batching through the block-paged KV pool in
+  `serve/paging.py`: requests join/leave a running batch without retracing
+  (power-of-two lane buckets), admission *reserves every page up front* so
+  pool exhaustion refuses admission (``admit() -> None`` — callers queue,
+  never drop), and each request's token stream is bit-identical to
+  ``generate`` under ANY admission interleaving.
+  `snapshot_pages`/`restore_pages` move one in-flight request between
+  engines at page granularity.  Design note: docs/serving.md.
+* **Front end** — `run_batch` (one HEFT_RT mapping event, whole-batch
+  generate per replica) and `run_continuous` (per-tick admission: HEFT_RT
+  maps arrivals to sticky per-replica FIFO queues, each tick drains queue
+  heads into free paged slots).  Both return outputs in request order.
 """
 
 from __future__ import annotations
@@ -68,6 +89,7 @@ class ServeEngine:
     tracer: object | None = None        # repro.obs.Tracer: step/reshard spans
 
     def __post_init__(self):
+        self._paged = None              # PagedRuntime (start_paged)
         self._build()
 
     def _build(self):
@@ -128,6 +150,11 @@ class ServeEngine:
                 self.params = jax.tree.map(
                     lambda x: jnp.asarray(np.asarray(x)), self.params)
             self._build()
+            if self._paged is not None:
+                # Paged runtime: the page pool migrates as a unit (pages are
+                # the live-migration granule) and the tick recompiles for
+                # the new slice; in-flight slots keep decoding.
+                self._paged.rebind()
             if caches is not None:
                 if self._cache_sh is not None:
                     caches = reshard_tree(caches, self._cache_sh)
@@ -217,6 +244,82 @@ class ServeEngine:
                     tr.complete("engine.decode_step", t0,
                                 time.perf_counter() - t0, pos=S0 + i)
             return np.asarray(jnp.concatenate(out, axis=1))
+
+    # -- continuous batching (block-paged KV pool; see serve/paging.py) -----
+
+    def start_paged(self, *, max_batch: int = 8, page_size: int = 16,
+                    num_pages: int | None = None):
+        """Switch this replica to the in-flight decode API.
+
+        Builds the device-resident page pool (``num_pages`` defaults to full
+        occupancy ``max_batch * max_len/page_size``; set it lower to
+        exercise admission-gating exhaustion) and the compiled
+        gather→decode→scatter tick.  After this, drive the engine with
+        :meth:`admit` / :meth:`decode_tick` / :meth:`retire`; the dense
+        :meth:`generate` path stays available and is the bitwise oracle the
+        paged path is tested against.  Returns the
+        :class:`~repro.serve.paging.PagedRuntime` (also kept on the engine).
+        """
+        from repro.serve.paging import PagedRuntime
+
+        self._paged = PagedRuntime(self, max_batch, page_size,
+                                   num_pages=num_pages)
+        return self._paged
+
+    @property
+    def paged(self):
+        """The active PagedRuntime, or None before :meth:`start_paged`."""
+        return self._paged
+
+    def _require_paged(self):
+        if self._paged is None:
+            raise RuntimeError("call start_paged() before the in-flight API")
+        return self._paged
+
+    def admit(self, prompt: np.ndarray, new_tokens: int) -> int | None:
+        """Prefill + join the running batch without stopping it.
+
+        Reserves the request's full page budget up front; returns the slot
+        id, or ``None`` when the pool lacks a slot/pages — callers queue
+        rejected requests (the contract is queue-never-drop; see
+        ``HeftFrontEnd.run_continuous``).
+        """
+        rt = self._require_paged()
+        with _span(self.tracer, "engine.admit",
+                   S0=int(np.asarray(prompt).size), new_tokens=new_tokens):
+            return rt.admit(prompt, new_tokens)
+
+    def decode_tick(self) -> dict[int, int]:
+        """One decode step for every in-flight slot → {slot: new token}."""
+        rt = self._require_paged()
+        with _span(self.tracer, "engine.decode_tick",
+                   active=len(rt.active_slots())):
+            return rt.decode_tick()
+
+    def finished_slots(self) -> list[int]:
+        """Slots whose generation completed and await :meth:`retire`."""
+        return self._require_paged().finished_slots()
+
+    def retire(self, slot: int) -> np.ndarray:
+        """Free a finished slot's pages; returns its (S0+new_tokens,) ids."""
+        return self._require_paged().retire(slot)
+
+    def free_pages(self) -> int:
+        """Pages currently available for admission."""
+        return self._require_paged().pool.free_pages
+
+    def snapshot_pages(self, slot: int) -> dict:
+        """Page-granular snapshot of ONE in-flight request (the continuous-
+        batching analogue of :meth:`snapshot_caches`: O(request), not
+        O(pool)).  Restore with :meth:`restore_pages` on any paged engine."""
+        with _span(self.tracer, "engine.snapshot_pages", slot=slot):
+            return self._require_paged().snapshot_slot(slot)
+
+    def restore_pages(self, snap: dict) -> int | None:
+        """Re-admit a :meth:`snapshot_pages` request here; decoding resumes
+        token-identically.  None when the pool is currently full."""
+        with _span(self.tracer, "engine.restore_pages"):
+            return self._require_paged().restore_slot(snap)
 
 
 @dataclass
@@ -408,6 +511,90 @@ class HeftFrontEnd:
             rep.processed += 1
         return [outputs[i] for i in range(len(requests))], \
             {r.name: r.processed for r in self.replicas}
+
+    def run_continuous(self, requests: list[tuple[np.ndarray, int]], *,
+                       arrival_ticks: list[int] | None = None,
+                       max_batch: int = 8, page_size: int = 16,
+                       num_pages: int | None = None):
+        """Continuous batching: the admission tick the paper's scheduler
+        needs to pay off on dynamic arrivals.
+
+        Each tick, requests that have arrived are mapped to replicas with
+        HEFT_RT (:meth:`schedule` — one sticky decision per request), each
+        replica drains its mapped queue head-first into free batch slots
+        (``admit``; a refusal re-queues, FIFO order preserved — pool
+        exhaustion *queues*, never drops), then every replica runs one
+        ``decode_tick`` and retires finished slots.  Requests join and leave
+        the running batch without stopping it, and each request's tokens are
+        bit-identical to ``engine.generate`` run alone — under any
+        interleaving (the paged-oracle contract, property-tested).
+
+        ``arrival_ticks[i]`` (default all 0) is the decode tick at which
+        request ``i`` becomes visible — the open-loop workload hook the
+        paged-serve benchmark drives.
+
+        Returns ``(outputs, stats)``: outputs in request order, and stats
+        with ``ticks``, per-replica ``processed``, and the pools' cumulative
+        ``allocated`` / ``freed`` page counters (equal at drain).
+        """
+        arrivals = arrival_ticks or [0] * len(requests)
+        if len(arrivals) != len(requests):
+            raise ValueError("arrival_ticks must match requests")
+        for r in self.replicas:
+            if r.engine.paged is None:
+                r.engine.start_paged(max_batch=max_batch,
+                                     page_size=page_size,
+                                     num_pages=num_pages)
+            pool = r.engine.paged.pool
+            for prompt, nt in requests:
+                need = pool.pages_needed(len(prompt) + nt)
+                if need > pool.num_pages:
+                    raise ValueError(
+                        f"request needs {need} pages but the pool holds "
+                        f"{pool.num_pages} — it could never be admitted")
+        order = sorted(range(len(requests)), key=lambda i: (arrivals[i], i))
+        queues: list[list[int]] = [[] for _ in self.replicas]   # req idx FIFO
+        slot_of: dict[tuple[int, int], int] = {}    # (rep, slot) → req idx
+        outputs: dict[int, np.ndarray] = {}
+        tick = 0
+        next_arrival = 0
+        while len(outputs) < len(requests):
+            # 1. HEFT_RT-map the newly arrived requests (sticky decisions).
+            batch = []
+            while (next_arrival < len(order)
+                   and arrivals[order[next_arrival]] <= tick):
+                batch.append(order[next_arrival])
+                next_arrival += 1
+            if batch:
+                plan = self.schedule([requests[i] for i in batch])
+                for req_i, rep_i in plan:
+                    queues[rep_i].append(batch[req_i])
+            # 2. Admission tick: drain each mapped queue into free slots.
+            for rep_i, r in enumerate(self.replicas):
+                while queues[rep_i]:
+                    idx = queues[rep_i][0]
+                    prompt, nt = requests[idx]
+                    slot = r.engine.admit(prompt, nt)
+                    if slot is None:       # exhausted: stays queued (FIFO)
+                        break
+                    queues[rep_i].pop(0)
+                    slot_of[(rep_i, slot)] = idx
+            # 3. Decode tick + retire finished slots.
+            for rep_i, r in enumerate(self.replicas):
+                r.engine.decode_tick()
+                for slot in r.engine.finished_slots():
+                    idx = slot_of.pop((rep_i, slot))
+                    outputs[idx] = r.engine.retire(slot)
+                    r.processed += 1
+            tick += 1
+        stats = {
+            "ticks": tick,
+            "processed": {r.name: r.processed for r in self.replicas},
+            "allocated": sum(r.engine.paged.pool.allocated
+                             for r in self.replicas),
+            "freed": sum(r.engine.paged.pool.freed for r in self.replicas),
+        }
+        return [outputs[i] for i in range(len(requests))], stats
 
 
 def mesh_backed_fleet(cfg: ModelConfig, params: dict, mesh_shapes,

@@ -1,0 +1,476 @@
+"""Block-paged KV cache pool for continuous batching (see docs/serving.md).
+
+The dense ``ServeEngine`` path allocates one ``(B, Smax, ...)`` cache tree
+per generation, so a new request can only start when a whole generation
+ends.  This module stores the caches of *all* in-flight requests in one
+device-resident pool of fixed-size pages and lets requests join and leave
+the running batch between decode steps — the admission path the paper's
+HEFT_RT scheduler needs to pay off on dynamic arrivals.
+
+Layout
+------
+Per paged cache leaf (names ``k``/``v``/``ckv``/``kr`` — the same name-based
+classification ``dist.sharding._cache_rule`` uses), the dense leaf's batch
+axis becomes ``num_pages + 1`` and its ``Smax`` axis becomes ``page_size``:
+
+    dense  (B, Smax, KV, hd)   →  pool (num_pages + 1, page_size, KV, hd)
+
+The final page (index ``num_pages``) is the *scratch page*: padded batch
+lanes and unreserved page-table tail entries point at it, so every tick runs
+with fully static shapes and stray writes land somewhere harmless.  State
+leaves (``conv``/``ssm`` — no sequence axis) live in a parallel *state pool*
+with ``max_batch + 1`` slots, the last being the scratch state slot.  Leaves
+stacked under ``stages`` keep their leading ``num_stages`` axis.  Pool
+leaves therefore have the same rank as their dense counterparts, which is
+why ``dist.sharding.page_pspecs`` can reuse the cache sharding rule
+structurally (page dim replicated like batch, ``page_size`` like ``Smax``).
+
+A per-slot page table (``max_batch + 1`` rows × ``pages_per_slot`` int32
+page ids; row ``max_batch`` is all-scratch) maps each sequence onto its
+pages.  All pages a request will ever need are reserved at admission
+(``ceil((S0 + new_tokens) / page_size)``), so decode can never run out of
+pages mid-flight: exhaustion only gates *admission*, and callers queue —
+never drop — rejected requests.
+
+Decode tick
+-----------
+Each tick gathers the active slots' pages into a dense-shaped
+``(B, Smax, ...)`` view, runs the standard ``decode_step`` with a per-row
+position vector, and scatters only the newly written token back to its
+page.  Rows are independent in every einsum/softmax of the model, stale
+garbage beyond a row's position is masked to ``-inf`` before softmax (pool
+values are always finite), and RoPE sees the same per-row positions — so
+each request's tokens are **bit-identical** to the dense single-request
+oracle (``ServeEngine.generate``), under any admission interleaving.  The
+active-lane count is padded to a power-of-two bucket (same idiom as
+``MappingFabric``; ``sched_integration.fabric.pow2_bucket``), so joins and
+leaves retrace at most ``log2(max_batch) + 1`` decode variants.
+
+Pages are also the migration and recovery unit: :meth:`PagedRuntime
+.snapshot_slot` captures one request's page set (plus its host-side decode
+state) as numpy, and :meth:`PagedRuntime.restore_slot` re-admits it on any
+engine with free capacity — the continuous-batching analogue of the chaos
+tier's whole-cache snapshot/restore.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.tree_util import tree_map_with_path
+
+from repro.sched_integration.fabric import pow2_bucket
+
+# Leaf classification by name — the same convention _cache_rule uses.
+PAGED_LEAVES = frozenset({"k", "v", "ckv", "kr"})
+STATE_LEAVES = frozenset({"conv", "ssm"})
+
+
+def _leaf_kind(path) -> tuple[bool, bool]:
+    """(is_paged, is_stacked) for one cache-tree leaf path."""
+    keys = []
+    for k in path:
+        keys.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    name = keys[-1]
+    if name in PAGED_LEAVES:
+        return True, "stages" in keys
+    if name in STATE_LEAVES:
+        return False, "stages" in keys
+    raise ValueError(f"unknown cache leaf {'/'.join(keys)!r}")
+
+
+@dataclass
+class _Slot:
+    """Host-side decode state of one in-flight request."""
+
+    prompt: np.ndarray            # (S0,) int32
+    new_tokens: int
+    pages: list[int]              # reserved page ids (freed at retire)
+    tokens: list[int] = field(default_factory=list)   # generated so far
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.new_tokens
+
+    @property
+    def write_pos(self) -> int:
+        """Cache position the *next* decode tick writes this slot's current
+        token at (= S0 + steps already decoded)."""
+        return len(self.prompt) + len(self.tokens) - 1
+
+
+class PagePool:
+    """Device-resident page pool + host-side page table and free lists.
+
+    Pure allocation bookkeeping — no model math.  ``num_pages`` defaults to
+    full occupancy (``max_batch * pages_per_slot``); configure it lower to
+    exercise exhaustion (admission then queues).  The ``allocated`` /
+    ``freed`` counters are cumulative page counts; at drain (no slots in
+    flight) they must match — the invariant tests assert.
+    """
+
+    def __init__(self, cfg, max_batch: int, page_size: int, max_len: int,
+                 num_pages: int | None = None):
+        if max_len % page_size != 0:
+            raise ValueError(
+                f"max_len={max_len} must be a multiple of page_size={page_size}")
+        self.cfg = cfg
+        self.max_batch = int(max_batch)
+        self.page_size = int(page_size)
+        self.max_len = int(max_len)
+        self.pages_per_slot = max_len // page_size
+        self.num_pages = int(num_pages if num_pages is not None
+                             else max_batch * self.pages_per_slot)
+        if self.num_pages < self.pages_per_slot:
+            raise ValueError(
+                f"num_pages={self.num_pages} cannot hold even one full "
+                f"sequence ({self.pages_per_slot} pages)")
+        self.scratch_page = self.num_pages          # index of the scratch page
+        self.scratch_slot = self.max_batch          # index of the scratch row
+        # Page table: scratch row at the end stays all-scratch forever.
+        self.table = np.full((self.max_batch + 1, self.pages_per_slot),
+                             self.scratch_page, dtype=np.int32)
+        self.free_page_ids: deque[int] = deque(range(self.num_pages))
+        self.free_slot_ids: deque[int] = deque(range(self.max_batch))
+        self.allocated = 0
+        self.freed = 0
+        self.pools = self._init_pools()
+
+    def _init_pools(self):
+        """Zero pool tree mirroring ``model.cache_specs`` leaf-for-leaf."""
+        from repro.models.model import cache_specs
+
+        specs = cache_specs(self.cfg, 1, self.max_len)
+
+        def pool_spec(path, leaf):
+            paged, stacked = _leaf_kind(path)
+            shape = list(leaf.shape)
+            b_ax, s_ax = (1, 2) if stacked else (0, 1)
+            if paged:
+                shape[b_ax] = self.num_pages + 1
+                shape[s_ax] = self.page_size
+            else:
+                shape[b_ax] = self.max_batch + 1
+            return jnp.zeros(tuple(shape), leaf.dtype)
+
+        return tree_map_with_path(pool_spec, specs)
+
+    # -- allocation ---------------------------------------------------------
+
+    def pages_needed(self, total_len: int) -> int:
+        return math.ceil(total_len / self.page_size)
+
+    def can_admit(self, total_len: int) -> bool:
+        return (len(self.free_slot_ids) > 0
+                and len(self.free_page_ids) >= self.pages_needed(total_len))
+
+    def reserve(self, total_len: int) -> tuple[int, list[int]]:
+        """Claim a slot and ALL pages ``total_len`` will need.  Caller must
+        check :meth:`can_admit` first; raises RuntimeError otherwise."""
+        n = self.pages_needed(total_len)
+        if not self.can_admit(total_len):
+            raise RuntimeError(
+                f"pool exhausted: need {n} pages / 1 slot, have "
+                f"{len(self.free_page_ids)} pages / "
+                f"{len(self.free_slot_ids)} slots")
+        slot = self.free_slot_ids.popleft()
+        pages = [self.free_page_ids.popleft() for _ in range(n)]
+        self.allocated += n
+        row = np.full(self.pages_per_slot, self.scratch_page, dtype=np.int32)
+        row[:n] = pages
+        self.table[slot] = row
+        return slot, pages
+
+    def release(self, slot: int, pages: list[int]) -> None:
+        self.table[slot] = self.scratch_page
+        self.free_page_ids.extend(pages)
+        self.free_slot_ids.append(slot)
+        self.freed += len(pages)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free_page_ids)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self.free_slot_ids)
+
+
+class PagedRuntime:
+    """Continuous-batching decode runtime bound to one ``ServeEngine``.
+
+    Built by :meth:`ServeEngine.start_paged`; the engine's ``admit`` /
+    ``decode_tick`` / ``retire`` / ``free_pages`` delegate here.  Holds the
+    :class:`PagePool`, the per-slot host decode state, and the compiled
+    gather→decode→scatter tick (one variant per power-of-two lane bucket).
+    Decode is greedy (the bitwise-oracle contract is argmax-per-row).
+    """
+
+    def __init__(self, engine, max_batch: int, page_size: int,
+                 num_pages: int | None = None):
+        self.engine = engine
+        self.pool = PagePool(engine.cfg, max_batch, page_size, engine.max_len,
+                             num_pages=num_pages)
+        self.slots: dict[int, _Slot] = {}
+        self._bind()
+
+    # -- compiled steps (rebuilt on reshard) --------------------------------
+
+    def _bind(self) -> None:
+        """(Re)build the jitted tick/admit-scatter for the engine's current
+        mesh slice.  Mirrors ``ServeEngine._build``: pool leaves take the
+        ``page_pspecs`` layouts, everything else replicates."""
+        from repro.dist.sharding import (named, page_pspecs, replica_pspecs,
+                                         reshard_tree)
+        from repro.models.model import decode_step
+
+        eng = self.engine
+        cfg = eng.cfg
+        pp, ps = self.pool.pages_per_slot, self.pool.page_size
+        scratch_page = self.pool.scratch_page
+
+        def gather(pools, table, slot_ids):
+            """pools + (B, pp) table + (B,) slot ids → dense (B, Smax, ...)
+            cache view."""
+            B = table.shape[0]
+
+            def g(path, pool):
+                paged, stacked = _leaf_kind(path)
+                if paged:
+                    if stacked:
+                        v = pool[:, table]          # (L, B, pp, ps, ...)
+                        return v.reshape(v.shape[0], B, pp * ps,
+                                         *v.shape[4:])
+                    v = pool[table]                 # (B, pp, ps, ...)
+                    return v.reshape(B, pp * ps, *v.shape[3:])
+                return pool[:, slot_ids] if stacked else pool[slot_ids]
+
+            return tree_map_with_path(g, pools)
+
+        def scatter_token(pools, new_caches, table, slot_ids, pos):
+            """Write back only what the tick changed: the one token each lane
+            wrote at ``pos`` (paged leaves) and the rolled state rows."""
+            B = table.shape[0]
+            rows = jnp.arange(B)
+            page = table[rows, pos // ps]           # (B,) target page ids
+            off = pos % ps
+
+            def s(path, pool, new):
+                paged, stacked = _leaf_kind(path)
+                if paged:
+                    if stacked:
+                        return pool.at[:, page, off].set(new[:, rows, pos])
+                    return pool.at[page, off].set(new[rows, pos])
+                if stacked:
+                    return pool.at[:, slot_ids].set(new)
+                return pool.at[slot_ids].set(new)
+
+            return tree_map_with_path(s, pools, new_caches)
+
+        def tick(params, pools, table, slot_ids, pos, tok):
+            dense = gather(pools, table, slot_ids)
+            logits, new_caches = decode_step(params, dense, tok, pos, cfg)
+            pools = scatter_token(pools, new_caches, table, slot_ids, pos)
+            return logits, pools
+
+        def admit_scatter(pools, dense, table_row, slot):
+            """Place one request's freshly prefilled (B=1) dense cache into
+            its reserved pages / state slot.  Tail table entries are the
+            scratch page, so over-length writes land there harmlessly."""
+
+            def s(path, pool, d):
+                paged, stacked = _leaf_kind(path)
+                if paged:
+                    if stacked:
+                        v = d[:, 0].reshape(d.shape[0], pp, ps, *d.shape[3:])
+                        return pool.at[:, table_row].set(v)
+                    v = d[0].reshape(pp, ps, *d.shape[2:])
+                    return pool.at[table_row].set(v)
+                if stacked:
+                    return pool.at[:, slot].set(d[:, 0])
+                return pool.at[slot].set(d[0])
+
+            return tree_map_with_path(s, pools, dense)
+
+        def restore_scatter(pools, vals, table_row, slot):
+            """Place a snapshotted page set (already page-shaped) back."""
+
+            def s(path, pool, v):
+                paged, stacked = _leaf_kind(path)
+                if paged:
+                    if stacked:
+                        return pool.at[:, table_row].set(v)
+                    return pool.at[table_row].set(v)
+                if stacked:
+                    return pool.at[:, slot].set(v)
+                return pool.at[slot].set(v)
+
+            return tree_map_with_path(s, pools, vals)
+
+        if eng.mesh is not None:
+            ax = eng.axes
+            pool_sh = named(eng.mesh, page_pspecs(cfg, ax))
+            p_sh = named(eng.mesh,
+                         replica_pspecs(cfg, ax, fsdp=eng.fsdp)["params"])
+            with eng._ctx():
+                self.pool.pools = reshard_tree(self.pool.pools, pool_sh)
+            self._tick = jax.jit(
+                tick,
+                in_shardings=(p_sh, pool_sh, None, None, None, None),
+                out_shardings=(None, pool_sh), donate_argnums=(1,))
+            self._admit_scatter = jax.jit(
+                admit_scatter,
+                in_shardings=(pool_sh, eng._cache_sh, None, None),
+                out_shardings=pool_sh, donate_argnums=(0,))
+            self._restore_scatter = jax.jit(
+                restore_scatter,
+                in_shardings=(pool_sh, None, None, None),
+                out_shardings=pool_sh, donate_argnums=(0,))
+        else:
+            self.pool.pools = jax.tree.map(jnp.asarray, self.pool.pools)
+            self._tick = jax.jit(tick, donate_argnums=(1,))
+            self._admit_scatter = jax.jit(admit_scatter, donate_argnums=(0,))
+            self._restore_scatter = jax.jit(restore_scatter,
+                                            donate_argnums=(0,))
+        # Scratch-page id, exposed for tests/introspection.
+        self.scratch_page = scratch_page
+
+    def rebind(self) -> None:
+        """Re-place the pools and rebuild the tick after an engine reshard.
+
+        The page set migrates as a unit through ``reshard_tree`` (or a host
+        round-trip when moving off-mesh) — in-flight requests keep decoding
+        token-identically on the new slice.
+        """
+        if self.engine.mesh is None:
+            self.pool.pools = jax.tree.map(
+                lambda x: jnp.asarray(np.asarray(x)), self.pool.pools)
+        self._bind()
+
+    # -- in-flight API ------------------------------------------------------
+
+    def admit(self, prompt: np.ndarray, new_tokens: int) -> int | None:
+        """Prefill + join the running batch.  Returns the slot id, or None
+        when the pool cannot hold the request (caller queues — never drops).
+
+        Reserves every page the request will need up front, so decode can
+        never hit exhaustion mid-flight.  The first generated token comes
+        from the prefill logits (argmax), exactly as the dense oracle's
+        ``generate`` computes it.
+        """
+        prompt = np.asarray(prompt, dtype=np.int32).reshape(-1)
+        total = len(prompt) + int(new_tokens)
+        if total > self.pool.max_len:
+            raise ValueError(f"S0+new_tokens={total} exceeds "
+                             f"max_len={self.pool.max_len}")
+        if new_tokens < 1:
+            raise ValueError("new_tokens must be >= 1")
+        if not self.pool.can_admit(total):
+            return None
+        slot, pages = self.pool.reserve(total)
+        eng = self.engine
+        with eng._ctx():
+            logits, dense = eng._prefill(eng.params, jnp.asarray(prompt[None]))
+            self.pool.pools = self._admit_scatter(
+                self.pool.pools, dense, jnp.asarray(self.pool.table[slot]),
+                jnp.int32(slot))
+            first = int(jnp.argmax(logits[0]))
+        self.slots[slot] = _Slot(prompt=prompt, new_tokens=int(new_tokens),
+                                 pages=pages, tokens=[first])
+        return slot
+
+    def active_slots(self) -> list[int]:
+        """Slots that still need decode ticks (not yet done)."""
+        return sorted(s for s, rec in self.slots.items() if not rec.done)
+
+    def finished_slots(self) -> list[int]:
+        """Slots whose generation is complete and awaiting :meth:`retire`."""
+        return sorted(s for s, rec in self.slots.items() if rec.done)
+
+    def decode_tick(self) -> dict[int, int]:
+        """One decode step for every active slot: gather pages → dense view
+        → ``decode_step`` with per-row positions → scatter the written
+        token.  Returns {slot: newly generated token}.  Lane count pads to
+        the next power of two (scratch-slot lanes), so admissions change the
+        compiled variant at most ``log2(max_batch)+1`` times.
+        """
+        active = self.active_slots()
+        if not active:
+            return {}
+        B = pow2_bucket(len(active), 1)
+        scratch = self.pool.scratch_slot
+        lanes = active + [scratch] * (B - len(active))
+        slot_ids = np.asarray(lanes, dtype=np.int32)
+        pos = np.zeros(B, dtype=np.int32)
+        tok = np.zeros((B, 1), dtype=np.int32)
+        for i, s in enumerate(active):
+            rec = self.slots[s]
+            pos[i] = rec.write_pos
+            tok[i, 0] = rec.tokens[-1]
+        eng = self.engine
+        with eng._ctx():
+            logits, self.pool.pools = self._tick(
+                eng.params, self.pool.pools,
+                jnp.asarray(self.pool.table[slot_ids]),
+                jnp.asarray(slot_ids), jnp.asarray(pos), jnp.asarray(tok))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        out = {}
+        for i, s in enumerate(active):
+            t = int(nxt[i])
+            self.slots[s].tokens.append(t)
+            out[s] = t
+        return out
+
+    def retire(self, slot: int) -> np.ndarray:
+        """Free the slot's pages and return the full (S0+new_tokens,) ids."""
+        rec = self.slots.pop(slot)
+        self.pool.release(slot, rec.pages)
+        return np.concatenate([rec.prompt,
+                               np.asarray(rec.tokens, dtype=np.int32)])
+
+    # -- pages as the migration / recovery unit -----------------------------
+
+    def snapshot_slot(self, slot: int) -> dict:
+        """Host-side snapshot of ONE request: its page set (page-shaped, not
+        the dense cache) + decode state.  O(request length), not O(pool)."""
+        rec = self.slots[slot]
+        row = self.pool.table[slot]
+
+        def snap(path, pool):
+            paged, stacked = _leaf_kind(path)
+            a = np.asarray(pool)
+            if paged:
+                return a[:, row] if stacked else a[row]
+            return a[:, slot] if stacked else a[slot]
+
+        return {
+            "pages": tree_map_with_path(snap, self.pool.pools),
+            "prompt": rec.prompt.copy(),
+            "new_tokens": rec.new_tokens,
+            "tokens": list(rec.tokens),
+        }
+
+    def restore_slot(self, snap: dict) -> int | None:
+        """Re-admit a :meth:`snapshot_slot` request into THIS pool (same or a
+        different engine).  Returns the new slot id, or None if the pool
+        cannot hold it right now (caller queues).  Decoding resumes
+        token-identically from the last committed token."""
+        total = len(snap["prompt"]) + int(snap["new_tokens"])
+        if not self.pool.can_admit(total):
+            return None
+        slot, pages = self.pool.reserve(total)
+        with self.engine._ctx():
+            self.pool.pools = self._restore_scatter(
+                self.pool.pools,
+                jax.tree.map(jnp.asarray, snap["pages"]),
+                jnp.asarray(self.pool.table[slot]), jnp.int32(slot))
+        self.slots[slot] = _Slot(prompt=np.asarray(snap["prompt"],
+                                                   dtype=np.int32),
+                                 new_tokens=int(snap["new_tokens"]),
+                                 pages=pages, tokens=list(snap["tokens"]))
+        return slot

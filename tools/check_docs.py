@@ -1,0 +1,65 @@
+"""Docs-consistency gate: every launcher flag must appear in docs/knobs.md.
+
+CI runs this after the test suite.  It parses every ``add_argument("--...")``
+call in ``src/repro/launch/*.py`` (AST, not regex, so commented-out flags
+don't count) and asserts each flag string occurs verbatim in
+``docs/knobs.md``.  Exit 1 on drift, listing the undocumented flags — the
+fix is to document the flag in the same PR that adds it.
+
+  PYTHONPATH=src python tools/check_docs.py
+"""
+
+import ast
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+LAUNCH = ROOT / "src" / "repro" / "launch"
+KNOBS = ROOT / "docs" / "knobs.md"
+
+
+def launcher_flags(path: pathlib.Path) -> list[str]:
+    """All ``--flag`` option strings passed to ``add_argument`` in ``path``."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    flags = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "add_argument"):
+            for arg in node.args:
+                if (isinstance(arg, ast.Constant)
+                        and isinstance(arg.value, str)
+                        and arg.value.startswith("--")):
+                    flags.append(arg.value)
+    return flags
+
+
+def main() -> int:
+    if not KNOBS.exists():
+        print(f"[check_docs] missing {KNOBS}", file=sys.stderr)
+        return 1
+    knobs = KNOBS.read_text()
+    missing = []
+    checked = 0
+    for path in sorted(LAUNCH.glob("*.py")):
+        for flag in launcher_flags(path):
+            checked += 1
+            if f"`{flag}`" not in knobs and flag not in knobs:
+                missing.append(f"{path.relative_to(ROOT)}: {flag}")
+    if not checked:
+        print("[check_docs] found no launcher flags at all — wrong tree?",
+              file=sys.stderr)
+        return 1
+    if missing:
+        print(f"[check_docs] {len(missing)} launcher flag(s) undocumented in "
+              f"docs/knobs.md:", file=sys.stderr)
+        for m in missing:
+            print(f"[check_docs]   {m}", file=sys.stderr)
+        return 1
+    print(f"[check_docs] OK — {checked} launcher flags all documented in "
+          f"docs/knobs.md")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
