@@ -1,0 +1,63 @@
+"""Lint gate cost: ``repro.analysis`` full-repo wall clock + throughput.
+
+The lint pass runs in CI *before* the tier-1 suite on every push, so its
+cost is paid on every iteration of every PR — it has to stay cheap enough
+that nobody is tempted to carve it out of the loop.  Tracked here:
+
+  * ``analysis_full_repo`` — one cold run over ``src/`` with all rules
+    (context rebuilt per repeat: parse + file rules + repo rules), ms;
+  * ``analysis_files_per_s`` — the same run as throughput, so the gate
+    scales honestly when the file count grows;
+  * ``_analysis_*`` bookkeeping — files/rules/findings counts (exempt
+    from the gate; they move whenever the repo or catalogue grows).
+
+The wall-clock row is CI-gated against ``BENCH_analysis.json`` with the
+loose shared-runner tolerance (``--tolerance 5.0``): the target class of
+regression is an accidentally quadratic rule (10-100x), not jitter.
+"""
+
+import time
+from pathlib import Path
+
+from repro.analysis import (apply_baseline, default_context, load_baseline,
+                            run_analysis)
+
+ROOT = Path(__file__).resolve().parent.parent
+REPEATS = 5
+
+
+def _one_run():
+    """One cold lint pass; returns (elapsed_s, result)."""
+    t0 = time.perf_counter()
+    ctx = default_context(ROOT)                 # fresh source cache each time
+    result = run_analysis(ctx)
+    return time.perf_counter() - t0, result
+
+
+def run():
+    _one_run()                                  # warm imports / FS cache
+    times, result = [], None
+    for _ in range(REPEATS):
+        dt, result = _one_run()
+        times.append(dt)
+    times.sort()
+    median_s = times[len(times) // 2]
+
+    baseline = load_baseline(ROOT / "tools" / "analysis_baseline.json")
+    fresh, absorbed = apply_baseline(result.findings, baseline)
+
+    files = len(default_context(ROOT).files)
+    rules = len(result.rules)
+    detail = f"files={files};rules={rules}"
+    return [
+        ("analysis_full_repo", median_s * 1e3, "ms", detail),
+        ("analysis_files_per_s", files / median_s, "files/s", detail),
+        ("_analysis_files", files, "count", "scanned under src/"),
+        ("_analysis_rules", rules, "count", "registered rules"),
+        ("_analysis_findings_fresh", len(fresh), "count",
+         "must be 0 — the CI lint step gates on it"),
+        ("_analysis_findings_baselined", absorbed, "count",
+         "grandfathered via tools/analysis_baseline.json"),
+        ("_analysis_findings_noqa", len(result.suppressed), "count",
+         "per-line repro: noqa[...] suppressions"),
+    ]

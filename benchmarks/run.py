@@ -21,6 +21,7 @@ unit per row).
   bench_energy                   paper future-work: energy-aware HEFT_RT
   bench_roofline                 deliverable (g): per-cell roofline terms
   bench_obs_overhead             beyond-paper: repro.obs instrumentation cost
+  bench_analysis                 infra: repro.analysis lint gate wall clock
 
 ``--json`` additionally writes one ``BENCH_<module>.json`` artifact per
 module (``--outdir DIR``, default ``benchmarks/artifacts``) —
@@ -71,6 +72,7 @@ MODULES = [
     "bench_energy",
     "bench_roofline",
     "bench_obs_overhead",
+    "bench_analysis",
 ]
 
 DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "artifacts")
@@ -82,6 +84,7 @@ DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "artifacts")
 CHECK_DIRECTION = {
     "ns": -1, "us": -1, "ms": -1, "s": -1, "B": -1, "requests": -1,
     "events/s": 1, "rps": 1, "tok/s": 1, "frames/s": 1, "GB/s": 1,
+    "files/s": 1,
 }
 
 # Units whose rows are bit-deterministic (analytic models, not wall clock):

@@ -1,0 +1,34 @@
+"""repro.analysis — jax-aware static design rules, machine-checked.
+
+The paper's argument is that correctness must be engineered into the
+substrate, not hoped for: the FPGA overlay is correct-by-construction, and
+HTS-style schedulers lean on hardware design-rule checking to stay sound at
+scale.  This package is the software analogue for our jax stack: the
+conventions the hot paths depend on (buffer donation discipline, no host
+round-trips inside registered hot functions, the three mesh-axis names,
+the ``shard_hint`` site inventory, retrace hygiene, event-schema /
+knob-doc coherence) are enforced as AST-level lint rules instead of by
+review.
+
+Entry point::
+
+    PYTHONPATH=src python -m repro.analysis src \
+        --baseline tools/analysis_baseline.json
+
+Findings print as ``path:line:col: rule: message``; a non-baselined,
+non-suppressed finding exits 1 (the CI gate).  Per-line suppression is
+``# repro: noqa[rule-name]`` with an optional reason after the bracket;
+grandfathered findings live in the checked-in baseline file (matched on
+``(rule, path, message)`` with counts, so they survive line drift but not
+new instances).
+
+Rule catalogue, examples, and the how-to-add-a-rule walkthrough:
+``docs/analysis.md``.
+"""
+
+from repro.analysis.findings import (Finding, apply_baseline,  # noqa: F401
+                                     load_baseline, suppressed,
+                                     write_baseline)
+from repro.analysis.registry import (AnalysisContext, Rule,  # noqa: F401
+                                     all_rules, default_context, rule)
+from repro.analysis.runner import run_analysis  # noqa: F401

@@ -1,0 +1,426 @@
+"""File-scope AST rules: donation, host sync, sharding axes, retrace.
+
+Shared vocabulary:
+
+* ``_dotted(node)`` renders ``Name``/``Attribute`` chains as their source
+  spelling (``self.pool.pools``) — the unit both the donation tracker and
+  the rebind scanner key on.
+* "host-known" names (host-sync rule) are names every one of whose
+  assignments inside the function produces a host value (numpy/math/len/
+  literal/...).  Anything else — parameters, jit outputs, unpacked tuples —
+  is conservatively treated as possibly device-resident.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import rule
+
+# ---------------------------------------------------------------------------
+# shared helpers
+
+
+def _dotted(node) -> str | None:
+    """``a.b.c`` for a pure Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _contains_jax(node) -> bool:
+    """Any ``jnp``/``jax`` reference anywhere in the subtree."""
+    return any(isinstance(n, ast.Name) and n.id in ("jnp", "jax")
+               for n in ast.walk(node))
+
+
+def _root_name(node) -> str | None:
+    """Leftmost Name of a Name/Attribute/Subscript chain (``a`` in
+    ``a.b[i].c``)."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _functions(tree):
+    for n in ast.walk(tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield n
+
+
+def _parent_map(tree) -> dict:
+    parents = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def _enclosing_statement(node, parents):
+    while node in parents and not isinstance(node, ast.stmt):
+        node = parents[node]
+    return node if isinstance(node, ast.stmt) else None
+
+
+def _is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+# ---------------------------------------------------------------------------
+# donation-after-use
+
+
+def _donate_positions(value) -> set[int]:
+    """Donated positional indices if ``value`` is a ``jax.jit``/``jit`` call
+    carrying ``donate_argnums`` (int or tuple of ints)."""
+    if not isinstance(value, ast.Call):
+        return set()
+    if _dotted(value.func) not in ("jax.jit", "jit"):
+        return set()
+    for kw in value.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        consts = ([v] if isinstance(v, ast.Constant)
+                  else list(v.elts) if isinstance(v, (ast.Tuple, ast.List))
+                  else [])
+        return {c.value for c in consts
+                if isinstance(c, ast.Constant) and isinstance(c.value, int)}
+    return set()
+
+
+def _assign_targets(stmt) -> list[str]:
+    """Dotted strings this statement rebinds (tuple targets flattened)."""
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        targets = [stmt.target]
+    else:
+        return []
+    out = []
+    for t in targets:
+        elts = t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t]
+        for e in elts:
+            d = _dotted(e)
+            if d:
+                out.append(d)
+    return out
+
+
+@rule("donation-after-use")
+def donation_after_use(ctx, path, tree, lines):
+    """A name passed in a ``donate_argnums`` position of a jitted callable
+    is read again before being rebound — the donated buffer is deleted by
+    XLA, so the later read sees garbage (or crashes).  The paging/fabric
+    tick pattern ``x = f(..., x, ...)`` (rebind in the same statement) is
+    the sanctioned shape; a donating call inside a loop must rebind the
+    donated name somewhere in the loop body."""
+    # Module-wide donation registry: assignment target → donated positions
+    # (`self._tick = jax.jit(tick, donate_argnums=(1,))` in _bind, called
+    # from decode_tick — same module, different methods).
+    donated: dict[str, set[int]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Assign, ast.AnnAssign)):
+            pos = _donate_positions(node.value)
+            if not pos:
+                continue
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                d = _dotted(t)
+                if d:
+                    donated.setdefault(d, set()).update(pos)
+    if not donated:
+        return
+    parents = _parent_map(tree)
+    rel = ctx.relpath(path)
+
+    for fn in _functions(tree):
+        # All occurrences of each donated-arg spelling inside this function,
+        # gathered lazily per argument expression.
+        calls = [n for n in ast.walk(fn)
+                 if isinstance(n, ast.Call) and _dotted(n.func) in donated]
+        for call in calls:
+            stmt = _enclosing_statement(call, parents)
+            if stmt is None:
+                continue
+            rebound_here = set(_assign_targets(stmt))
+            for p in donated[_dotted(call.func)]:
+                if p >= len(call.args):
+                    continue
+                arg = _dotted(call.args[p])
+                if arg is None:
+                    continue          # fresh expression — nothing to reread
+                if arg in rebound_here:
+                    continue          # x = f(..., x, ...): the safe pattern
+                # Occurrences of `arg` after the donating statement.
+                occ = []
+                for n in ast.walk(fn):
+                    if _dotted(n) == arg and isinstance(
+                            n, (ast.Name, ast.Attribute)):
+                        occ.append(n)
+                later = [n for n in occ if n.lineno > stmt.end_lineno]
+                later.sort(key=lambda n: (n.lineno, n.col_offset))
+                if later and isinstance(getattr(later[0], "ctx", None),
+                                        ast.Load):
+                    yield Finding(
+                        rel, later[0].lineno, later[0].col_offset,
+                        "donation-after-use",
+                        f"{arg!r} is donated to {_dotted(call.func)}() at "
+                        f"line {call.lineno} (donate_argnums position {p}) "
+                        f"but read again before rebinding — the buffer is "
+                        f"deleted by XLA")
+                    continue
+                # Donating call inside a loop: next iteration re-reads the
+                # donated name at the call itself unless the body rebinds it.
+                loop = stmt
+                node = stmt
+                loop = None
+                while node in parents:
+                    node = parents[node]
+                    if isinstance(node, (ast.For, ast.While)):
+                        loop = node
+                        break
+                    if isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                        break
+                if loop is not None:
+                    rebinds = {t for s in ast.walk(loop)
+                               if isinstance(s, ast.stmt)
+                               for t in _assign_targets(s)}
+                    if arg not in rebinds:
+                        yield Finding(
+                            rel, call.lineno, call.col_offset,
+                            "donation-after-use",
+                            f"{arg!r} is donated to {_dotted(call.func)}() "
+                            f"inside a loop without being rebound in the "
+                            f"loop body — the next iteration reads a "
+                            f"deleted buffer")
+
+
+# ---------------------------------------------------------------------------
+# host-sync-in-hot-path
+
+_SYNC_BUILTINS = ("float", "bool")
+_HOST_FUNCS = {"len", "range", "sorted", "list", "tuple", "dict", "set",
+               "min", "max", "sum", "abs", "int", "float", "bool", "str",
+               "enumerate", "zip"}
+_HOST_ROOTS = {"np", "numpy", "math"}
+
+
+def _is_host_expr(e) -> bool:
+    """Conservatively: does this expression produce a host value?"""
+    if isinstance(e, (ast.Constant, ast.List, ast.Tuple, ast.Dict, ast.Set,
+                      ast.ListComp, ast.DictComp, ast.SetComp,
+                      ast.GeneratorExp, ast.JoinedStr)):
+        return True
+    if isinstance(e, ast.Call):
+        f = e.func
+        if isinstance(f, ast.Name) and f.id in _HOST_FUNCS:
+            return True
+        root = _root_name(f)
+        return root in _HOST_ROOTS
+    if isinstance(e, ast.BinOp):
+        return _is_host_expr(e.left) and _is_host_expr(e.right)
+    if isinstance(e, ast.UnaryOp):
+        return _is_host_expr(e.operand)
+    return False
+
+
+def _host_known_names(fn) -> set[str]:
+    """Names whose every assignment in ``fn`` is host-producing."""
+    produced: dict[str, bool] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+            host = _is_host_expr(node.value)
+            produced[name] = produced.get(name, True) and host
+        elif isinstance(node, ast.For) and isinstance(node.target, ast.Name):
+            # `for i, s in enumerate(active)` handled below; plain
+            # `for x in <host expr>` marks x host.
+            produced[node.target.id] = (produced.get(node.target.id, True)
+                                        and _is_host_expr(node.iter))
+        elif isinstance(node, ast.For) and isinstance(node.target, ast.Tuple):
+            host = _is_host_expr(node.iter)
+            for e in node.target.elts:
+                if isinstance(e, ast.Name):
+                    produced[e.id] = produced.get(e.id, True) and host
+    return {n for n, host in produced.items() if host}
+
+
+@rule("host-sync-in-hot-path")
+def host_sync_in_hot_path(ctx, path, tree, lines):
+    """Inside a hot-registered function (``decode_tick``, ``map_batch``,
+    ``step``, ``schedule``, ... — see ``AnalysisContext.hot_functions`` /
+    ``REPRO_LINT_HOT``), a blocking device→host synchronization:
+    ``x.item()``, ``float(x)`` / ``bool(x)`` on a possibly-device value, or
+    ``np.asarray(<jnp expression>)`` (an eager op dispatched outside the
+    jitted program *plus* a transfer).  The sanctioned shape is one batched
+    ``np.asarray(out)`` of a value the jitted program already computed."""
+    rel = ctx.relpath(path)
+    for fn in _functions(tree):
+        if fn.name not in ctx.hot_functions:
+            continue
+        host_known = _host_known_names(fn)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            # x.item()
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                yield Finding(
+                    rel, node.lineno, node.col_offset,
+                    "host-sync-in-hot-path",
+                    f".item() inside hot function {fn.name!r} blocks on a "
+                    f"device scalar every call")
+                continue
+            # float(x) / bool(x) on a possibly-device value
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in _SYNC_BUILTINS and node.args:
+                arg = node.args[0]
+                if isinstance(arg, ast.Constant):
+                    continue
+                root = _root_name(arg)
+                if root is not None and root in host_known:
+                    continue
+                if root is None and not _contains_jax(arg) \
+                        and _is_host_expr(arg):
+                    continue
+                yield Finding(
+                    rel, node.lineno, node.col_offset,
+                    "host-sync-in-hot-path",
+                    f"{node.func.id}() on a possibly-device value inside "
+                    f"hot function {fn.name!r} — one blocking transfer per "
+                    f"call; hoist to a single np.asarray() of the jitted "
+                    f"output (or mark the name host-side)")
+                continue
+            # np.asarray(<expr containing jnp/jax>) — eager op + sync
+            f = _dotted(node.func)
+            if f in ("np.asarray", "np.array", "numpy.asarray",
+                     "numpy.array") and node.args \
+                    and _contains_jax(node.args[0]):
+                yield Finding(
+                    rel, node.lineno, node.col_offset,
+                    "host-sync-in-hot-path",
+                    f"{f}() over a jnp/jax expression inside hot function "
+                    f"{fn.name!r} dispatches the op eagerly outside the "
+                    f"jitted program and then blocks on the transfer — "
+                    f"compute it inside the jitted step and transfer the "
+                    f"(small) result instead")
+
+
+# ---------------------------------------------------------------------------
+# sharding-axis
+
+
+def _spec_strings(node):
+    """String constants appearing in a PartitionSpec argument (tuples of
+    axis names count — ``P(("pod", "data"), None)``)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        yield node.value, node
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for e in node.elts:
+            yield from _spec_strings(e)
+
+
+@rule("sharding-axis")
+def sharding_axis(ctx, path, tree, lines):
+    """Every ``PartitionSpec``/``P(...)`` literal outside ``dist/`` must
+    name only the ROADMAP's logical mesh axes (``pod``/``data``/``model``).
+    Model and scheduler code consume layouts through named ``shard_hint``
+    sites; a stray literal axis name bypasses the policy indirection and
+    breaks on any mesh that doesn't spell that axis."""
+    rel = ctx.relpath(path)
+    if any(part in ctx.axis_exempt_parts for part in Path(rel).parts):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = _dotted(node.func)
+        if f is None or not (f == "P" or f.split(".")[-1] == "PartitionSpec"):
+            continue
+        for s, anchor in (pair for a in node.args
+                          for pair in _spec_strings(a)):
+            if s not in ctx.axis_names:
+                yield Finding(
+                    rel, anchor.lineno, anchor.col_offset, "sharding-axis",
+                    f"PartitionSpec axis {s!r} is not one of the mesh axes "
+                    f"{tuple(sorted(ctx.axis_names))} (ROADMAP sharding "
+                    f"conventions) — outside dist/, specs must use the "
+                    f"logical axis names only")
+
+
+# ---------------------------------------------------------------------------
+# retrace-hazard
+
+_BUCKET_KWARGS = ("min_bucket", "min_pe_bucket")
+
+
+@rule("retrace-hazard")
+def retrace_hazard(ctx, path, tree, lines):
+    """Two retrace traps: (a) ``jax.jit`` applied to a lambda or a function
+    defined inside the enclosing loop body — a fresh callable every
+    iteration, so the jit cache never hits and every iteration retraces;
+    (b) a non-power-of-two bucket literal (``min_bucket=``/``min_pe_bucket=``
+    or ``pow2_bucket(n, k)``'s floor) — pool sizes that bypass the
+    power-of-two bucketing retrace on every resize instead of
+    ``log2``-many times."""
+    rel = ctx.relpath(path)
+    seen = set()
+    for loop in ast.walk(tree):
+        if not isinstance(loop, (ast.For, ast.While)):
+            continue
+        local_defs = {n.name for n in ast.walk(loop)
+                      if isinstance(n, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef))}
+        for node in ast.walk(loop):
+            if not (isinstance(node, ast.Call)
+                    and _dotted(node.func) in ("jax.jit", "jit")
+                    and node.args):
+                continue
+            anchor = (node.lineno, node.col_offset)
+            if anchor in seen:
+                continue
+            target = node.args[0]
+            fresh = isinstance(target, ast.Lambda) or (
+                isinstance(target, ast.Name) and target.id in local_defs)
+            if fresh:
+                seen.add(anchor)
+                yield Finding(
+                    rel, node.lineno, node.col_offset, "retrace-hazard",
+                    "jax.jit on a callable created inside the loop body — "
+                    "a fresh function object every iteration defeats the "
+                    "jit cache (hoist the jit out of the loop)")
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg in _BUCKET_KWARGS \
+                    and isinstance(kw.value, ast.Constant) \
+                    and isinstance(kw.value.value, int) \
+                    and not _is_pow2(kw.value.value):
+                yield Finding(
+                    rel, kw.value.lineno, kw.value.col_offset,
+                    "retrace-hazard",
+                    f"{kw.arg}={kw.value.value} is not a power of two — "
+                    f"buckets off the pow2 grid retrace per resize instead "
+                    f"of log2-many times (see fabric.pow2_bucket)")
+        f = _dotted(node.func)
+        if f and f.split(".")[-1] == "pow2_bucket" and len(node.args) > 1:
+            floor = node.args[1]
+            if isinstance(floor, ast.Constant) \
+                    and isinstance(floor.value, int) \
+                    and not _is_pow2(floor.value):
+                yield Finding(
+                    rel, floor.lineno, floor.col_offset, "retrace-hazard",
+                    f"pow2_bucket floor {floor.value} is not a power of "
+                    f"two — the bucket grid degenerates and lane counts "
+                    f"retrace per admission")

@@ -35,6 +35,28 @@ from __future__ import annotations
 import contextlib
 import threading
 
+# The machine-readable site inventory: every shard_hint site name the model
+# stack may use, one entry per site (the docstring's moe_groups[4]/moe_rows[4]
+# shorthand expands to the base-rank and rank-4 variants).  The static lint
+# pass (repro.analysis, rule hint-drift) enforces a bijection between this
+# tuple and the shard_hint call sites under models/ — add the site here and
+# in activation_hint_policy in the same PR that introduces it.
+SITE_INVENTORY = (
+    "layer_boundary",
+    "sublayer_input",
+    "attn_heads",
+    "attn_kv",
+    "ffn_hidden",
+    "mamba_inner",
+    "moe_groups",
+    "moe_groups4",
+    "moe_rows",
+    "moe_rows4",
+    "moe_logits",
+    "logits",
+    "embed_grad",
+)
+
 _state = threading.local()
 
 

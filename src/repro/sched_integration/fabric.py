@@ -621,7 +621,9 @@ class MappingFabric:
             res, self._counters = fn(a_p, ex_p, av_in, valid,
                                      self._counters, self._p_valid)
             return res
-        return fn(a_p, ex_p, av_in, valid)
+        # Exclusive else-branch of the counted call above — only one of the
+        # two dispatches runs, so av_in is donated exactly once.
+        return fn(a_p, ex_p, av_in, valid)  # repro: noqa[donation-after-use]
 
     # -- mapping events ------------------------------------------------------
 

@@ -488,6 +488,9 @@ class HeftFrontEnd:
             # amortized over its n decisions (weight n keeps counts honest).
             self.metrics.histogram("frontend.decision_s").record(
                 dt / max(n, 1), n=max(n, 1))
+        # One host materialization for the whole register file, not one
+        # blocking float() per replica (host-sync-in-hot-path design rule).
+        new_avail = np.asarray(new_avail)
         for i, r in enumerate(self.replicas):
             r.avail_at = float(new_avail[i])
         return [(int(order[i]), int(assignment[i])) for i in range(n)]

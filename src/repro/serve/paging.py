@@ -276,7 +276,11 @@ class PagedRuntime:
             dense = gather(pools, table, slot_ids)
             logits, new_caches = decode_step(params, dense, tok, pos, cfg)
             pools = scatter_token(pools, new_caches, table, slot_ids, pos)
-            return logits, pools
+            # Greedy selection INSIDE the jitted program: the host only ever
+            # transfers the (B,) winning tokens, never the (B, V) logits —
+            # same argmax the dense oracle computes, one op earlier
+            # (host-sync-in-hot-path design rule; see repro.analysis).
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), pools
 
         def admit_scatter(pools, dense, table_row, slot):
             """Place one request's freshly prefilled (B=1) dense cache into
@@ -414,11 +418,11 @@ class PagedRuntime:
             tok[i, 0] = rec.tokens[-1]
         eng = self.engine
         with eng._ctx():
-            logits, self.pool.pools = self._tick(
+            toks, self.pool.pools = self._tick(
                 eng.params, self.pool.pools,
                 jnp.asarray(self.pool.table[slot_ids]),
                 jnp.asarray(slot_ids), jnp.asarray(pos), jnp.asarray(tok))
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            nxt = np.asarray(toks)
         out = {}
         for i, s in enumerate(active):
             t = int(nxt[i])

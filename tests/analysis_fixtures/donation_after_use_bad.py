@@ -1,0 +1,15 @@
+"""Fixture: donated buffers read after the donating call (rule fires 2x)."""
+import jax
+
+f = jax.jit(lambda a, b: a + b, donate_argnums=(1,))
+
+
+def read_after_donation(x, y):
+    out = f(x, y)
+    return out + y          # y was donated: this read sees a deleted buffer
+
+
+def donate_in_loop(x, y):
+    for _ in range(4):
+        out = f(x, y)       # y donated, never rebound in the loop body
+    return out

@@ -1,0 +1,26 @@
+"""Fixture: the sanctioned donation shapes (rule stays silent)."""
+import jax
+
+f = jax.jit(lambda a, b: a + b, donate_argnums=(1,))
+
+
+class Runtime:
+    def __init__(self):
+        self.tick = jax.jit(lambda p, pools: (p, pools * 2),
+                            donate_argnums=(1,))
+        self.pools = None
+
+    def step(self, p):
+        # Rebind-in-the-same-statement: the paging/fabric tick pattern.
+        out, self.pools = self.tick(p, self.pools)
+        return out
+
+
+def rebind_each_iteration(x, y):
+    for _ in range(4):
+        y = f(x, y)         # donated AND rebound every iteration
+    return y
+
+
+def last_use(x, y):
+    return f(x, y)          # nothing reads y afterwards

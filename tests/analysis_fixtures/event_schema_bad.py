@@ -1,0 +1,32 @@
+"""Fixture fleet-like module: dataclass/validator drift (fires 4x).
+
+* ``severity`` field missing from the validator schema,
+* ``factor`` schema key missing from the dataclass,
+* ``_TIMELINE_REQUIRED`` naming a non-field,
+* ``ResizeEvent`` missing the shared ``reason`` envelope field.
+"""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ResizeEvent:
+    t: float
+    add: tuple = ()
+    remove: tuple = ()
+    # envelope field `reason` lost
+
+
+@dataclass(frozen=True)
+class FailureEvent:
+    t: float
+    kind: str
+    target: str
+    duration_s: float = 0.0
+    severity: int = 0           # not in _TIMELINE_FIELDS
+    reason: str = ""
+
+
+_TIMELINE_FIELDS = {"t": (int, float), "kind": str, "target": str,
+                    "duration_s": (int, float), "factor": (int, float),
+                    "reason": str}
+_TIMELINE_REQUIRED = ("t", "kind", "target", "factor")

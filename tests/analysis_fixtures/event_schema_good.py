@@ -1,0 +1,26 @@
+"""Fixture fleet-like module: dataclasses and validator in lockstep."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ResizeEvent:
+    t: float
+    add: tuple = ()
+    remove: tuple = ()
+    reason: str = ""
+
+
+@dataclass(frozen=True)
+class FailureEvent:
+    t: float
+    kind: str
+    target: str
+    duration_s: float = 0.0
+    factor: float = 1.0
+    reason: str = ""
+
+
+_TIMELINE_FIELDS = {"t": (int, float), "kind": str, "target": str,
+                    "duration_s": (int, float), "factor": (int, float),
+                    "reason": str}
+_TIMELINE_REQUIRED = ("t", "kind", "target")

@@ -1,0 +1,7 @@
+"""Fixture hints module: inventory with a dead site (``ghost_site``)."""
+
+SITE_INVENTORY = (
+    "layer_boundary",
+    "ffn_hidden",
+    "ghost_site",       # inventoried but never used by the models tree
+)

@@ -1,0 +1,10 @@
+"""Fixture model: one rogue site, one non-literal site (fires 3x total)."""
+from repro.dist.hints import shard_hint
+
+
+def block(x, name):
+    x = shard_hint(x, "layer_boundary")     # inventoried: fine
+    x = shard_hint(x, "ffn_hidden")         # inventoried: fine
+    x = shard_hint(x, "rogue_site")         # NOT in SITE_INVENTORY
+    x = shard_hint(x, name)                 # non-literal defeats the inventory
+    return x

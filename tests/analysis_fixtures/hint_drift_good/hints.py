@@ -1,0 +1,6 @@
+"""Fixture hints module: inventory bijecting with the models tree."""
+
+SITE_INVENTORY = (
+    "layer_boundary",
+    "ffn_hidden",
+)

@@ -1,0 +1,8 @@
+"""Fixture model: every site literal and inventoried (rule stays silent)."""
+from repro.dist.hints import shard_hint
+
+
+def block(x):
+    x = shard_hint(x, "layer_boundary")
+    h = shard_hint(x, "ffn_hidden")
+    return x + h

@@ -1,0 +1,13 @@
+"""Fixture: host round-trips inside hot-registered functions (fires 3x)."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_tick(self, logits, loss):
+    nxt = np.asarray(jnp.argmax(logits, axis=-1))   # eager op + transfer
+    cur = float(loss)                               # scalar sync per tick
+    return nxt, cur
+
+
+def map_batch(self, finish):
+    return finish.item()                            # blocking device scalar

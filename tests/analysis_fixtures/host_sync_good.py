@@ -1,0 +1,18 @@
+"""Fixture: hot functions with only the sanctioned transfer shapes."""
+import numpy as np
+
+
+def decode_tick(self, toks_dev):
+    # One batched materialization of a value the jitted program computed.
+    nxt = np.asarray(toks_dev)
+    pos = np.zeros(4, dtype=np.int32)       # host-side bookkeeping is fine
+    return [int(nxt[i]) + int(pos[i]) for i in range(4)]
+
+
+def schedule(self, new_avail):
+    new_avail = np.asarray(new_avail)       # marks the name host-side
+    return [float(new_avail[i]) for i in range(new_avail.shape[0])]
+
+
+def not_hot(self, loss):
+    return float(loss)                      # cold path: not a design rule

@@ -1,0 +1,9 @@
+"""Fixture launcher: one documented flag, one undocumented (fires 1x)."""
+import argparse
+
+
+def build():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--secret-knob", type=float, default=0.5)  # not in docs
+    return ap

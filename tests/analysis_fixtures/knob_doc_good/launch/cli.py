@@ -1,0 +1,9 @@
+"""Fixture launcher: every flag documented (rule stays silent)."""
+import argparse
+
+
+def build():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--rate", type=float, default=0.5)
+    return ap

@@ -1,0 +1,26 @@
+"""Fixture: retrace traps (fires 4x: lambda, loop-local def, two buckets)."""
+import jax
+
+from repro.sched_integration.fabric import MappingFabric, pow2_bucket
+
+
+def jit_in_loop(xs):
+    out = []
+    for x in xs:
+        f = jax.jit(lambda a: a * 2)        # fresh lambda every iteration
+        out.append(f(x))
+    return out
+
+
+def local_def_in_loop(xs):
+    out = []
+    for x in xs:
+        def body(a):
+            return a + 1
+        out.append(jax.jit(body)(x))        # fresh def every iteration
+    return out
+
+
+def off_grid_buckets(exec_np, n):
+    fab = MappingFabric(exec_np, min_pe_bucket=12)   # not a power of two
+    return fab, pow2_bucket(n, 3)                    # degenerate floor

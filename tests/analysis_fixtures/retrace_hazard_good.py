@@ -1,0 +1,22 @@
+"""Fixture: retrace-clean jit + bucketing idiom (rule stays silent)."""
+import jax
+
+from repro.sched_integration.fabric import MappingFabric, pow2_bucket
+
+f = jax.jit(lambda a: a * 2)                # hoisted: one trace per shape
+
+
+def jit_outside_loop(xs):
+    return [f(x) for x in xs]
+
+
+def reuse_module_fn(xs):
+    out = []
+    for x in xs:
+        out.append(f(x))                    # cached callable inside the loop
+    return out
+
+
+def on_grid_buckets(exec_np, n, floor):
+    fab = MappingFabric(exec_np, min_pe_bucket=8)    # pow2 literal
+    return fab, pow2_bucket(n, 1), pow2_bucket(n, floor)

@@ -1,0 +1,10 @@
+"""Fixture: PartitionSpec literals off the pod/data/model grid (fires 3x)."""
+from jax.sharding import PartitionSpec as P
+from jax.sharding import PartitionSpec
+
+
+def bad_specs():
+    a = P("tp", None)                       # not a ROADMAP axis
+    b = P(("pod", "dp"), None, "model")     # tuple entry off-grid
+    c = PartitionSpec("expert")             # long-form spelling too
+    return a, b, c

@@ -1,0 +1,12 @@
+"""Fixture: conforming PartitionSpec usage (rule stays silent)."""
+from jax.sharding import PartitionSpec as P
+
+pod_axis = "pod"
+
+
+def good_specs(ax):
+    a = P("pod", "data", "model")           # the three logical axes
+    b = P(("pod", "data"), None)            # tuples of them
+    c = P(pod_axis, None)                   # variables are policy-driven
+    d = P(*ax)                              # starred: resolved elsewhere
+    return a, b, c, d

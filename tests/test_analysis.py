@@ -1,0 +1,296 @@
+"""repro.analysis — the jax-aware lint pass (satellite of the ISSUE 9 tentpole).
+
+Contract under test, per rule in the catalogue (docs/analysis.md):
+
+* every rule **fires** on its ``tests/analysis_fixtures/*_bad*`` fixture
+  with the exact expected count, and is **silent** on the ``*_good*`` twin;
+* ``# repro: noqa[rule]`` suppresses exactly the annotated line;
+* the checked-in baseline round-trips (write → load → apply) and absorbs
+  by (rule, path, message) *count*, not blanket key;
+* the full-repo run is clean modulo ``tools/analysis_baseline.json`` —
+  the same invariant the CI ``lint-analysis`` step gates on;
+* the CLI exits 1 on fresh findings, 0 when clean.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    AnalysisContext,
+    Finding,
+    all_rules,
+    apply_baseline,
+    default_context,
+    load_baseline,
+    run_analysis,
+    write_baseline,
+)
+
+HERE = Path(__file__).resolve().parent
+FIXTURES = HERE / "analysis_fixtures"
+REPO_ROOT = HERE.parent
+
+
+def _file_ctx(*names):
+    """File-scope context over flat fixtures (repo anchors all None)."""
+    return AnalysisContext(root=FIXTURES,
+                           files=tuple(FIXTURES / n for n in names))
+
+
+def _run(ctx, rule_name):
+    return run_analysis(ctx, rule_names=[rule_name])
+
+
+# ---------------------------------------------------------------------------
+# File-scope rules: fires on bad (exact count), silent on good.
+# ---------------------------------------------------------------------------
+
+FILE_RULE_CASES = [
+    # (rule, bad fixture, expected findings, good fixture)
+    ("donation-after-use", "donation_after_use_bad.py", 2,
+     "donation_after_use_good.py"),
+    ("host-sync-in-hot-path", "host_sync_bad.py", 3, "host_sync_good.py"),
+    ("sharding-axis", "sharding_axis_bad.py", 3, "sharding_axis_good.py"),
+    ("retrace-hazard", "retrace_hazard_bad.py", 4, "retrace_hazard_good.py"),
+]
+
+
+@pytest.mark.parametrize("rule_name,bad,count,good", FILE_RULE_CASES,
+                         ids=[c[0] for c in FILE_RULE_CASES])
+def test_file_rule_fires_on_bad(rule_name, bad, count, good):
+    res = _run(_file_ctx(bad), rule_name)
+    assert len(res.findings) == count, [f.render() for f in res.findings]
+    assert all(f.rule == rule_name for f in res.findings)
+    assert not res.suppressed
+
+
+@pytest.mark.parametrize("rule_name,bad,count,good", FILE_RULE_CASES,
+                         ids=[c[0] for c in FILE_RULE_CASES])
+def test_file_rule_silent_on_good(rule_name, bad, count, good):
+    res = _run(_file_ctx(good), rule_name)
+    assert res.findings == [], [f.render() for f in res.findings]
+
+
+def test_donation_messages_name_the_buffer():
+    res = _run(_file_ctx("donation_after_use_bad.py"), "donation-after-use")
+    msgs = " | ".join(f.message for f in res.findings)
+    assert "y" in msgs and "donat" in msgs
+
+
+def test_host_sync_reports_each_pattern_once():
+    res = _run(_file_ctx("host_sync_bad.py"), "host-sync-in-hot-path")
+    msgs = [f.message for f in res.findings]
+    assert any(".item()" in m for m in msgs)
+    assert any("float(" in m for m in msgs)
+    assert any("asarray" in m for m in msgs)
+
+
+def test_sharding_axis_names_offending_axis():
+    res = _run(_file_ctx("sharding_axis_bad.py"), "sharding-axis")
+    named = {m for f in res.findings for m in ("tp", "dp", "expert")
+             if m in f.message}
+    assert named == {"tp", "dp", "expert"}
+
+
+def test_sharding_axis_exempts_dist_paths(tmp_path):
+    sub = tmp_path / "dist"
+    sub.mkdir()
+    bad = sub / "meshes.py"
+    bad.write_text((FIXTURES / "sharding_axis_bad.py").read_text())
+    ctx = AnalysisContext(root=tmp_path, files=(bad,))
+    assert _run(ctx, "sharding-axis").findings == []
+
+
+# ---------------------------------------------------------------------------
+# Repo-scope rules, driven by fixture mini-trees via AnalysisContext anchors.
+# ---------------------------------------------------------------------------
+
+def _hint_ctx(which):
+    tree = FIXTURES / f"hint_drift_{which}"
+    return AnalysisContext(root=tree, files=(),
+                           hints_path=tree / "hints.py",
+                           models_dir=tree / "models")
+
+
+def test_hint_drift_fires_on_bad():
+    res = _run(_hint_ctx("bad"), "hint-drift")
+    msgs = " | ".join(f.message for f in res.findings)
+    assert len(res.findings) == 3, [f.render() for f in res.findings]
+    assert "rogue_site" in msgs          # used but not inventoried
+    assert "ghost_site" in msgs          # inventoried but never used
+    assert "literal" in msgs             # non-literal site name
+
+
+def test_hint_drift_silent_on_good():
+    assert _run(_hint_ctx("good"), "hint-drift").findings == []
+
+
+def _event_ctx(which):
+    return AnalysisContext(root=FIXTURES, files=(),
+                           fleet_path=FIXTURES / f"event_schema_{which}.py")
+
+
+def test_event_schema_drift_fires_on_bad():
+    res = _run(_event_ctx("bad"), "event-schema-drift")
+    msgs = " | ".join(f.message for f in res.findings)
+    assert len(res.findings) == 4, [f.render() for f in res.findings]
+    assert "severity" in msgs            # field missing from validator
+    assert "factor" in msgs              # schema key / required non-field
+    assert "reason" in msgs              # ResizeEvent lost the envelope
+
+
+def test_event_schema_drift_silent_on_good():
+    assert _run(_event_ctx("good"), "event-schema-drift").findings == []
+
+
+def _knob_ctx(which):
+    tree = FIXTURES / f"knob_doc_{which}"
+    return AnalysisContext(root=tree, files=(),
+                           launch_dir=tree / "launch",
+                           knobs_md=tree / "knobs.md")
+
+
+def test_knob_doc_drift_fires_on_bad():
+    res = _run(_knob_ctx("bad"), "knob-doc-drift")
+    assert len(res.findings) == 1, [f.render() for f in res.findings]
+    assert "--secret-knob" in res.findings[0].message
+
+
+def test_knob_doc_drift_silent_on_good():
+    assert _run(_knob_ctx("good"), "knob-doc-drift").findings == []
+
+
+def test_repo_rules_skip_when_anchor_missing():
+    """None anchors → repo rules self-skip instead of crashing."""
+    ctx = AnalysisContext(root=FIXTURES, files=())
+    for name in ("hint-drift", "event-schema-drift", "knob-doc-drift"):
+        assert _run(ctx, name).findings == [], name
+
+
+# ---------------------------------------------------------------------------
+# Suppression + baseline machinery.
+# ---------------------------------------------------------------------------
+
+def test_noqa_suppresses_only_annotated_line(tmp_path):
+    src = tmp_path / "hot.py"
+    src.write_text(
+        "import jax.numpy as jnp\n"
+        "import numpy as np\n"
+        "def decode_tick(x, y):\n"
+        "    a = np.asarray(jnp.argmax(x))  # repro: noqa[host-sync-in-hot-path]\n"
+        "    b = np.asarray(jnp.argmax(y))\n"
+        "    return a, b\n")
+    res = _run(AnalysisContext(root=tmp_path, files=(src,)),
+               "host-sync-in-hot-path")
+    assert len(res.suppressed) == 1 and res.suppressed[0].line == 4
+    assert len(res.findings) == 1 and res.findings[0].line == 5
+
+
+def test_noqa_is_rule_specific(tmp_path):
+    src = tmp_path / "hot.py"
+    src.write_text(
+        "import jax.numpy as jnp\n"
+        "import numpy as np\n"
+        "def decode_tick(x):\n"
+        "    return np.asarray(jnp.argmax(x))  # repro: noqa[retrace-hazard]\n")
+    res = _run(AnalysisContext(root=tmp_path, files=(src,)),
+               "host-sync-in-hot-path")
+    assert len(res.findings) == 1 and not res.suppressed
+
+
+def test_baseline_round_trip(tmp_path):
+    res = _run(_file_ctx("sharding_axis_bad.py"), "sharding-axis")
+    path = tmp_path / "baseline.json"
+    write_baseline(path, res.findings)
+    baseline = load_baseline(path)
+
+    fresh, absorbed = apply_baseline(res.findings, baseline)
+    assert fresh == [] and absorbed == len(res.findings)
+
+    # A NEW instance of an already-baselined key is still fresh: absorption
+    # is count-matched, not a blanket per-key waiver.
+    extra = res.findings[0]
+    dup = Finding(path=extra.path, line=extra.line + 40, col=extra.col,
+                  rule=extra.rule, message=extra.message)
+    fresh, absorbed = apply_baseline(res.findings + [dup], baseline)
+    assert len(fresh) == 1 and fresh[0].line == dup.line
+
+
+def test_baseline_is_line_drift_tolerant(tmp_path):
+    res = _run(_file_ctx("retrace_hazard_bad.py"), "retrace-hazard")
+    path = tmp_path / "baseline.json"
+    write_baseline(path, res.findings)
+    shifted = [Finding(path=f.path, line=f.line + 7, col=f.col,
+                       rule=f.rule, message=f.message) for f in res.findings]
+    fresh, absorbed = apply_baseline(shifted, load_baseline(path))
+    assert fresh == [] and absorbed == len(shifted)
+
+
+def test_unknown_rule_name_raises():
+    with pytest.raises(ValueError):
+        run_analysis(_file_ctx("host_sync_good.py"), rule_names=["no-such"])
+
+
+def test_registry_has_the_full_catalogue():
+    names = set(all_rules())
+    assert {"donation-after-use", "host-sync-in-hot-path", "sharding-axis",
+            "retrace-hazard", "hint-drift", "event-schema-drift",
+            "knob-doc-drift"} <= names
+
+
+# ---------------------------------------------------------------------------
+# Meta-test + CLI: the exact invariant CI's lint-analysis step gates on.
+# ---------------------------------------------------------------------------
+
+def test_full_repo_clean_modulo_baseline():
+    ctx = default_context(REPO_ROOT)
+    assert len(ctx.files) > 50          # really scanning src/, not a stub dir
+    res = run_analysis(ctx)
+    baseline = load_baseline(REPO_ROOT / "tools" / "analysis_baseline.json")
+    fresh, _ = apply_baseline(res.findings, baseline)
+    assert fresh == [], "\n".join(f.render() for f in fresh)
+
+
+def _cli(*argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT)
+
+
+def test_cli_exit_codes_and_json(tmp_path):
+    out = tmp_path / "findings.json"
+    bad = _cli(str(FIXTURES / "host_sync_bad.py"), "--root", str(FIXTURES),
+               "--json", str(out))
+    assert bad.returncode == 1, bad.stdout + bad.stderr
+    payload = json.loads(out.read_text())
+    assert len(payload["findings"]) == 3
+    assert all(f["rule"] == "host-sync-in-hot-path"
+               for f in payload["findings"])
+
+    good = _cli(str(FIXTURES / "host_sync_good.py"), "--root", str(FIXTURES))
+    assert good.returncode == 0, good.stdout + good.stderr
+
+
+def test_cli_update_baseline_then_clean(tmp_path):
+    base = tmp_path / "baseline.json"
+    first = _cli(str(FIXTURES / "retrace_hazard_bad.py"), "--root",
+                 str(FIXTURES), "--baseline", str(base), "--update-baseline")
+    assert first.returncode == 0, first.stdout + first.stderr
+    assert len(json.loads(base.read_text())["findings"]) > 0
+
+    second = _cli(str(FIXTURES / "retrace_hazard_bad.py"), "--root",
+                  str(FIXTURES), "--baseline", str(base))
+    assert second.returncode == 0, second.stdout + second.stderr
+
+
+def test_cli_rejects_unknown_rule():
+    res = _cli(str(FIXTURES / "host_sync_good.py"), "--root", str(FIXTURES),
+               "--rules", "no-such-rule")
+    assert res.returncode == 2

@@ -1,63 +1,37 @@
-"""Docs-consistency gate: every launcher flag must appear in docs/knobs.md.
+"""Docs-consistency gate — thin shim over ``repro.analysis``.
 
-CI runs this after the test suite.  It parses every ``add_argument("--...")``
-call in ``src/repro/launch/*.py`` (AST, not regex, so commented-out flags
-don't count) and asserts each flag string occurs verbatim in
-``docs/knobs.md``.  Exit 1 on drift, listing the undocumented flags — the
-fix is to document the flag in the same PR that adds it.
+The launcher-flag/knobs.md check now lives in the lint framework as the
+``knob-doc-drift`` rule (src/repro/analysis/rules_repo.py), where it runs
+alongside the other repo-scope rules under ``python -m repro.analysis``.
+This entry point is kept so existing invocations keep working:
 
   PYTHONPATH=src python tools/check_docs.py
+
+It runs ONLY the knob-doc-drift rule and keeps the old exit-code contract
+(0 = every flag documented, 1 = drift, listed on stderr).
 """
 
-import ast
 import pathlib
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
-LAUNCH = ROOT / "src" / "repro" / "launch"
-KNOBS = ROOT / "docs" / "knobs.md"
-
-
-def launcher_flags(path: pathlib.Path) -> list[str]:
-    """All ``--flag`` option strings passed to ``add_argument`` in ``path``."""
-    tree = ast.parse(path.read_text(), filename=str(path))
-    flags = []
-    for node in ast.walk(tree):
-        if (isinstance(node, ast.Call)
-                and isinstance(node.func, ast.Attribute)
-                and node.func.attr == "add_argument"):
-            for arg in node.args:
-                if (isinstance(arg, ast.Constant)
-                        and isinstance(arg.value, str)
-                        and arg.value.startswith("--")):
-                    flags.append(arg.value)
-    return flags
+sys.path.insert(0, str(ROOT / "src"))
 
 
 def main() -> int:
-    if not KNOBS.exists():
-        print(f"[check_docs] missing {KNOBS}", file=sys.stderr)
-        return 1
-    knobs = KNOBS.read_text()
-    missing = []
-    checked = 0
-    for path in sorted(LAUNCH.glob("*.py")):
-        for flag in launcher_flags(path):
-            checked += 1
-            if f"`{flag}`" not in knobs and flag not in knobs:
-                missing.append(f"{path.relative_to(ROOT)}: {flag}")
-    if not checked:
-        print("[check_docs] found no launcher flags at all — wrong tree?",
+    from repro.analysis import default_context, run_analysis
+
+    ctx = default_context(ROOT, paths=[])
+    res = run_analysis(ctx, rule_names=["knob-doc-drift"])
+    for f in res.findings:
+        print(f"[check_docs] {f.render()}", file=sys.stderr)
+    if res.findings:
+        print(f"[check_docs] {len(res.findings)} knob-doc-drift finding(s) — "
+              f"document the flag in docs/knobs.md in the same PR",
               file=sys.stderr)
         return 1
-    if missing:
-        print(f"[check_docs] {len(missing)} launcher flag(s) undocumented in "
-              f"docs/knobs.md:", file=sys.stderr)
-        for m in missing:
-            print(f"[check_docs]   {m}", file=sys.stderr)
-        return 1
-    print(f"[check_docs] OK — {checked} launcher flags all documented in "
-          f"docs/knobs.md")
+    print("[check_docs] OK — launcher flags all documented in docs/knobs.md "
+          "(via repro.analysis knob-doc-drift)")
     return 0
 
 
