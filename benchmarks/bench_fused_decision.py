@@ -1,0 +1,125 @@
+"""Batch-1 steady-state scheduler-decision latency, decision fused in-tick.
+
+The paper's headline is 9.144 ns/decision once HEFT_RT lives in the FPGA
+fabric next to the PEs — 183× below the software path, because the decision
+stops round-tripping a host.  This benchmark measures the repo's analogue:
+the HEFT_RT admission decision running *inside* the paged decode tick's
+compiled program (``PagedRuntime.decode_tick(sched=...)`` with a
+``MappingFabric(backend="fused")`` — see docs/scheduling.md), where its
+marginal cost is device compute riding a dispatch the serving loop already
+pays for, versus the host path (one ``map_event`` round trip per event).
+
+Method: a single long-lived request keeps one decode lane busy (batch-1
+steady state); plain and fused-scheduler ticks are timed individually in a
+drift-cancelling ``plain, fused, fused, plain`` pattern (first-order clock
+/ frequency drift subtracts out of the paired difference), and the
+per-decision latency is the pair's marginal time amortized over the
+``N_SCHED`` decisions each fused tick maps.  The median over ``PAIRS``
+differences is robust to scheduler spikes; the floor guards the
+subtraction against noise going negative.
+
+Acceptance (self-enforcing, the bench_chaos pattern): fused per-decision
+p50 must be ≤ 10 µs — the "~100 µs toward single-digit µs" success metric —
+and the rows gate against the tracked artifact via ``run.py --check`` in CI.
+"""
+
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import time_call
+from repro.models.config import ModelConfig
+from repro.models.model import init_params
+from repro.sched_integration.fabric import MappingFabric
+from repro.serve.engine import ServeEngine
+
+CFG = ModelConfig(name="bench-fused", num_layers=2, d_model=32, num_heads=4,
+                  num_kv_heads=4, d_ff=64, vocab_size=64)
+MAX_LEN = 1024          # long-lived slot: hundreds of steady-state ticks
+N_SCHED = 32            # admission-batch size each fused decision maps
+P_FLEET = 4             # PE/replica lanes in the fabric
+PAIRS = 60              # drift-cancelled (plain, fused, fused, plain) sets
+ACCEPT_US = 10.0        # single-digit-µs acceptance for the fused path
+FLOOR_US = 0.05         # noise floor for the marginal subtraction
+
+
+def _setup():
+    params = init_params(jax.random.key(0), CFG)
+    eng = ServeEngine(CFG, params, max_len=MAX_LEN)
+    eng.start_paged(max_batch=2, page_size=16)
+    prompt = np.arange(1, 17, dtype=np.int32)
+    slot = eng.admit(prompt, MAX_LEN - len(prompt))
+    assert slot is not None
+    rng = np.random.default_rng(0)
+    avg = rng.integers(0, 6, N_SCHED).astype(np.float64)
+    ex = rng.integers(1, 16, (N_SCHED, P_FLEET)).astype(np.float64)
+    fab = MappingFabric(P_FLEET, backend="fused")
+    return eng.paged, fab, avg, ex
+
+
+def run():
+    rt, fab, avg, ex = _setup()
+    sched = (avg, ex, fab)
+    for _ in range(5):                      # compile + warm both variants
+        rt.decode_tick()
+        rt.decode_tick(sched)
+
+    def one(fused):
+        t0 = time.perf_counter()
+        rt.decode_tick(sched) if fused else rt.decode_tick()
+        return time.perf_counter() - t0
+
+    marginals, plain_us, fused_us = [], [], []
+    for _ in range(PAIRS):
+        p1, f1, f2, p2 = one(False), one(True), one(True), one(False)
+        plain_us.append((p1 + p2) / 2 * 1e6)
+        fused_us.append((f1 + f2) / 2 * 1e6)
+        marginals.append(max(FLOOR_US, ((f1 + f2) - (p1 + p2)) / 2
+                             * 1e6 / N_SCHED))
+    assert rt.active_slots(), "slot token budget exhausted mid-measurement"
+    p50 = float(np.percentile(marginals, 50))
+    p99 = float(np.percentile(marginals, 99))
+
+    # The host path the fusion replaces: a *dedicated* map_event dispatch
+    # per mapping event on the same fused fabric (run_continuous' cold-start
+    # fallback makes exactly this call).  Off-accelerator the dispatch has
+    # no PCIe/sync round trip to save, so this bounds the pipeline — the
+    # speedup row reads ~1x here and grows with real device round trips.
+    host_fab = MappingFabric(P_FLEET, backend="fused")
+    host_us = time_call(lambda: host_fab.map_event(avg, ex),
+                        repeats=9, warmup=3) / N_SCHED
+    # The pure software scheduler (the oracle itself), for reference.
+    oracle_fab = MappingFabric(P_FLEET, backend="numpy")
+    oracle_us = time_call(lambda: oracle_fab.map_event(avg, ex),
+                          repeats=9, warmup=3) / N_SCHED
+
+    if p50 > ACCEPT_US:
+        raise RuntimeError(
+            f"fused in-tick per-decision p50 {p50:.2f}us exceeds the "
+            f"{ACCEPT_US}us acceptance bound (paper target: single-digit "
+            f"us; host dispatch path: {host_us:.2f}us)")
+
+    tag = (f"in_tick_marginal;n={N_SCHED};P={P_FLEET};"
+           f"effective={fab.backend_effective}")
+    return [
+        ("fused_decision_batch1_p50", p50, "us", tag + f";accept<={ACCEPT_US}"),
+        ("fused_decision_batch1_p99", p99, "us", tag),
+        ("host_decision_batch1_us", host_us, "us",
+         f"dedicated map_event dispatch/n;n={N_SCHED};backend=fused"),
+        ("host_oracle_decision_batch1_us", oracle_us, "us",
+         f"map_event/n;n={N_SCHED};backend=numpy (software scheduler)"),
+        ("fused_vs_host_decision_speedup", host_us / max(p50, FLOOR_US), "x",
+         "host_decision_batch1_us / fused_decision_batch1_p50; "
+         "off-accelerator this bounds the dispatch pipeline"),
+        ("_plain_tick_us", float(np.percentile(plain_us, 50)), "us",
+         "decode tick without the fused decision (bookkeeping)"),
+        ("_fused_tick_us", float(np.percentile(fused_us, 50)), "us",
+         "decode tick carrying the fused decision (bookkeeping)"),
+    ]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

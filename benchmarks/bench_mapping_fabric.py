@@ -11,7 +11,17 @@ mapping events (ready queues of depth D over P PEs) dispatched
     so off-TPU numbers bound the dispatch pipeline, not the kernel).
 
 Steady-state timings (compilation excluded by warmup).
+
+Also measures the *batch-1 steady-state* regime the continuous-serving loop
+lives in — one mapping event at a time against the resident T_avail
+registers — reporting per-decision p50/p99 (µs) for every backend, with the
+path that actually ran (``backend_effective``, e.g. ``pallas-interpret``
+off-accelerator) stamped into the derived column.  The in-tick fused
+decision (zero host round-trips) is benchmarked separately in
+``bench_fused_decision.py``.
 """
+
+import time
 
 import numpy as np
 
@@ -23,6 +33,31 @@ from repro.sched_integration import MappingFabric
 
 D, P = 64, 8
 BATCHES = (1, 64, 256)
+STEADY_EVENTS = 30          # batch-1 steady-state samples per backend
+STEADY_EVENTS_SLOW = 5      # interpret-mode pallas: same rows, fewer samples
+
+
+def _steady_rows(rng, rows):
+    """Batch-1 steady state: repeated single events on resident registers."""
+    for backend in ("numpy", "jit", "pallas", "fused"):
+        fab = MappingFabric(P, backend=backend)
+        reps = (STEADY_EVENTS_SLOW if fab.backend_effective
+                == "pallas-interpret" else STEADY_EVENTS)
+        events = [( rng.integers(0, 6, D).astype(np.float32),
+                    rng.integers(1, 16, (D, P)).astype(np.float32))
+                  for _ in range(reps)]
+        for avg, ex in events[:2]:      # compile + warm the dispatch
+            fab.map_event(avg, ex)
+        samples = []
+        for avg, ex in events:
+            t0 = time.perf_counter()
+            fab.map_event(avg, ex)
+            samples.append((time.perf_counter() - t0) * 1e6 / D)
+        tag = f"per_decision;D={D};P={P};effective={fab.backend_effective}"
+        rows.append((f"fabric_{backend}_batch1_decision_p50",
+                     float(np.percentile(samples, 50)), "us", tag))
+        rows.append((f"fabric_{backend}_batch1_decision_p99",
+                     float(np.percentile(samples, 99)), "us", tag))
 
 
 def _events(rng, B):
@@ -62,6 +97,7 @@ def run():
     speedup = per_event[("numpy", 256)] / per_event[("jit", 256)]
     rows.append(("fabric_jit_speedup_vs_numpy_batch256", speedup, "x",
                  "events_per_s_ratio;acceptance>=10"))
+    _steady_rows(rng, rows)
     return rows
 
 

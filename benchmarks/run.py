@@ -14,6 +14,7 @@ unit per row).
   bench_serve_sharded            beyond-paper: mesh-backed fleet + cost model
   bench_paged_serve              beyond-paper: continuous batching / paged KV
   bench_mapping_fabric           beyond-paper: fabric-batched mapping events
+  bench_fused_decision           beyond-paper: in-tick fused HEFT_RT decision
   bench_train_compress           beyond-paper: int8 pod-compressed train step
   bench_elastic_fleet            beyond-paper: elastic fleet resize events
   bench_chaos                    beyond-paper: failure-trace goodput + recovery
@@ -65,6 +66,7 @@ MODULES = [
     "bench_serve_sharded",
     "bench_paged_serve",
     "bench_mapping_fabric",
+    "bench_fused_decision",
     "bench_train_compress",
     "bench_elastic_fleet",
     "bench_chaos",

@@ -34,6 +34,11 @@ DEFAULT_HOT_FUNCTIONS = frozenset({
     "step",             # ServeEngine.step / train step bodies / scan steps
     "tick",             # PagedRuntime's jitted gather→decode→scatter body
     "schedule",         # HeftFrontEnd per-event mapping
+    "tick_sched",           # fused tick: decode + in-program HEFT_RT decision
+    "tick_sched_counted",   # fused tick variant with device counters
+    "decision_ref",         # kernels/fused_decision traced decision body
+    "tick_decision_inputs",  # fabric staging for the fused tick
+    "commit_tick_decision",  # fabric adoption of fused-tick outputs
 })
 
 # The ROADMAP's three logical mesh axes — the only names a PartitionSpec

@@ -1,9 +1,20 @@
 # The paper's compute hot-spot IS a custom hardware datapath: the HEFT_RT
 # overlay processor (priority queue + PE handlers + EFT selector).  These
 # Pallas kernels are its TPU-native port (see DESIGN.md §2):
-#   oddeven_sort — shift-register priority queue (brick-wall compare-exchange)
-#   eft_select   — PE-handler adders + EFT min-tree + availability feedback
-#   heft_fused   — the full overlay: one pallas_call per mapping event
-from repro.kernels.ops import eft_select, heft_rt_hw, oddeven_sort
+#   oddeven_sort   — shift-register priority queue (brick-wall compare-exchange)
+#   eft_select     — PE-handler adders + EFT min-tree + availability feedback
+#   heft_fused     — the full overlay: one pallas_call per mapping event
+#   fused_decision — the overlay with a device-resident PE mask, fusable into
+#                    the paged decode tick (zero host scheduling round-trips)
+from repro.kernels.fused_decision import decision_ref
+from repro.kernels.ops import (decision_hw, eft_select, heft_rt_hw,
+                               interpret_default, oddeven_sort)
 
-__all__ = ["eft_select", "heft_rt_hw", "oddeven_sort"]
+__all__ = [
+    "decision_hw",
+    "decision_ref",
+    "eft_select",
+    "heft_rt_hw",
+    "interpret_default",
+    "oddeven_sort",
+]

@@ -1,0 +1,228 @@
+"""The device-resident HEFT_RT decision, fusable into the decode tick.
+
+The source paper's thesis is that the scheduler belongs in the same clock
+domain as the PEs it feeds (9.144 ns/decision once HEFT_RT is an FPGA
+overlay next to the workers).  The TPU-side analogue of "same clock domain"
+is *same compiled program*: this module provides the decision as a pure
+traceable function that ``serve.paging.PagedRuntime`` inlines into its
+jitted gather→decode→scatter tick, so a steady-state serving loop makes
+zero host scheduling round-trips — the decision's inputs (the ``T_avail``
+register file, the PE partition mask, the observability counter registers)
+stay device-resident between ticks and its outputs ride the token transfer
+the tick already performs.
+
+Two implementations, decision-for-decision identical:
+
+* :func:`decision_ref` — pure ``jax.numpy`` on top of
+  :func:`repro.core.heft_rt`, with the PE mask applied *inside the traced
+  program* (no per-event host-side matrix copy, unlike
+  ``MappingFabric._masked``).  This is the form fused into the decode tick
+  and the ``fused`` fabric backend's standalone dispatch.
+* :func:`decision_hw` — the Pallas overlay kernel
+  (:mod:`repro.kernels.heft_fused` extended with an in-kernel additive PE
+  mask), the non-interpreted lowering used when an accelerator backend is
+  attached.  Off-accelerator it runs in interpret mode like every other
+  kernel in this package.
+
+Masking contract: ``pe_mask`` is a boolean lane vector; ``True`` lanes'
+exec columns become ``+inf`` before the EFT selection, exactly the chaos
+tier's partition semantics (``MappingFabric.set_pe_mask``) — so decisions
+with a mask equal the ``heft_rt_numpy`` oracle on the masked matrix, and
+with an all-``False`` mask the program is bit-identical to the unmasked
+dispatch (``where(False, inf, x) == x``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.heft_rt import ScheduleResult, heft_rt
+
+INF = float("inf")
+NEG_INF = float("-inf")
+
+
+def decision_ref(avg, exec_times, avail, valid, pe_mask) -> ScheduleResult:
+    """One HEFT_RT mapping event with an in-program PE mask (traceable).
+
+    ``avg``: f32[D] priority keys; ``exec_times``: f32[D, P];
+    ``avail``: f32[P] — the device-resident register file, typically passed
+    as a donated argument so the buffer is reused for ``new_avail``;
+    ``valid``: bool[D] real-slot mask; ``pe_mask``: bool[P], ``True`` lanes
+    are masked out of dispatch (their committed registers stay resident).
+
+    Pure jnp — safe to inline into any jitted program (the decode tick).
+    """
+    ex = jnp.where(pe_mask[None, :], jnp.float32(INF),
+                   exec_times.astype(jnp.float32))
+    return heft_rt(avg, ex, avail, valid)
+
+
+def pack_tick_outputs(toks, res: ScheduleResult):
+    """Pack a fused tick's host-bound outputs into ONE int32 buffer.
+
+    Each separate device→host materialization of an in-flight program's
+    output costs tens of µs of fixed sync overhead — transferring the
+    tokens plus five decision arrays individually would dominate the fused
+    decision's single-digit-µs budget.  Instead the compiled tick returns
+    this single lane: ``tokens | order | assignment | start | finish |
+    new_avail``, float lanes bitcast to int32 (``lax.bitcast_convert_type``
+    is a bit-move, so the host's ``.view(np.float32)`` recovers them
+    *bit-exactly* — no float↔int value round-trip is involved, ±inf and
+    every mantissa bit survive).  The fused tick then pays exactly one
+    transfer, the same count as the plain tick.
+
+    The resident ``new_avail`` register (device buffer) is returned
+    separately by the tick — the copy packed here is the host's read-only
+    view for the ``map_event`` 5-tuple contract.
+    """
+    bits = lambda x: lax.bitcast_convert_type(x, jnp.int32)
+    return jnp.concatenate([
+        toks.reshape(-1).astype(jnp.int32),
+        res.order.astype(jnp.int32),
+        res.assignment.astype(jnp.int32),
+        bits(res.start_time),
+        bits(res.finish_time),
+        bits(res.new_avail),
+    ])
+
+
+def unpack_decision(buf, num_pes: int):
+    """Host-side inverse of :func:`pack_tick_outputs`' decision lanes.
+
+    ``buf``: the int32 host buffer *after* the token prefix was sliced off
+    (length ``4*D + P``); ``num_pes``: the padded PE lane count ``P``.
+    Returns untrimmed ``(order, assignment, start, finish, new_avail)``
+    numpy views — zero-copy reinterpretation, bit-identical to the arrays
+    the program computed.
+    """
+    d = (buf.shape[0] - num_pes) // 4
+    return (buf[:d], buf[d:2 * d],
+            buf[2 * d:3 * d].view(np.float32),
+            buf[3 * d:4 * d].view(np.float32),
+            buf[4 * d:].view(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Pallas overlay variant: the fused kernel with an in-kernel additive mask
+# ---------------------------------------------------------------------------
+
+
+def _decision_kernel(ke_ref, ko_ref, qe_ref, qo_ref, exec_ref, mask_ref,
+                     avail_ref, order_ref, pe_out_ref, st_out_ref,
+                     fin_out_ref, avail_out_ref, *, M: int, D: int,
+                     P_pad: int):
+    """``heft_fused._fused_kernel`` + a (1, P_pad) additive mask row.
+
+    The mask row carries ``0.0`` on dispatchable lanes and ``+inf`` on
+    masked/padded lanes; adding it at the LUT-RAM read masks the lane for
+    every dequeued task without touching the exec table in HBM (``finite +
+    inf == inf``, ``inf + inf == inf`` — exec times live in ``[0, +inf]``).
+    """
+    col = lax.broadcasted_iota(jnp.int32, (1, M), 1)
+    is_last = col == (M - 1)
+    is_first = col == 0
+
+    # ---- phase 1: odd–even transposition sort (priority queue) ----------
+    def phase_pair(_, carry):
+        ke, ko, qe, qo = carry
+        m = ke < ko
+        ke, ko = jnp.where(m, ko, ke), jnp.where(m, ke, ko)
+        qe, qo = jnp.where(m, qo, qe), jnp.where(m, qe, qo)
+        b = jnp.where(is_last, NEG_INF, jnp.roll(ke, -1, axis=1))
+        qb = jnp.roll(qe, -1, axis=1)
+        m = ko < b
+        ko_new = jnp.where(m, b, ko)
+        b_new = jnp.where(m, ko, b)
+        qo_new = jnp.where(m, qb, qo)
+        qb_new = jnp.where(m, qo, qb)
+        ke = jnp.where(is_first, ke, jnp.roll(b_new, 1, axis=1))
+        qe = jnp.where(is_first, qe, jnp.roll(qb_new, 1, axis=1))
+        return ke, ko_new, qe, qo_new
+
+    init = (ke_ref[...], ko_ref[...], qe_ref[...], qo_ref[...])
+    _, _, qe, qo = lax.fori_loop(0, M + 1, phase_pair, init)
+
+    # ---- phase 2: drain + masked EFT assignment -------------------------
+    lanes = lax.broadcasted_iota(jnp.int32, (1, P_pad), 1)
+    dcol = lax.broadcasted_iota(jnp.int32, (1, D), 1)
+    mask_row = mask_ref[...]
+
+    def body(t, carry):
+        avail, orders, pes, sts, fins = carry
+        i = t // 2
+        sel_i = col == i
+        q_even = jnp.sum(jnp.where(sel_i, qe, 0))
+        q_odd = jnp.sum(jnp.where(sel_i, qo, 0))
+        qid = jnp.where(t % 2 == 0, q_even, q_odd).astype(jnp.int32)
+        ex = exec_ref[pl.ds(qid, 1), :] + mask_row   # masked LUT-RAM read
+        finish = avail + ex
+        fmin = jnp.min(finish)
+        pe = jnp.argmin(finish).astype(jnp.int32)
+        ok = fmin < INF
+        sel = lanes == pe
+        start = jnp.min(jnp.where(sel, avail, INF))
+        avail = jnp.where(sel & ok, fmin, avail)
+        here = dcol == t
+        orders = jnp.where(here, qid, orders)
+        pes = jnp.where(here, jnp.where(ok, pe, -1), pes)
+        sts = jnp.where(here, jnp.where(ok, start, INF), sts)
+        fins = jnp.where(here, jnp.where(ok, fmin, INF), fins)
+        return avail, orders, pes, sts, fins
+
+    init2 = (
+        avail_ref[...],
+        jnp.zeros((1, D), dtype=jnp.int32),
+        jnp.full((1, D), -1, dtype=jnp.int32),
+        jnp.full((1, D), INF, dtype=jnp.float32),
+        jnp.full((1, D), INF, dtype=jnp.float32),
+    )
+    avail, orders, pes, sts, fins = lax.fori_loop(0, D, body, init2)
+    order_ref[...] = orders
+    pe_out_ref[...] = pes
+    st_out_ref[...] = sts
+    fin_out_ref[...] = fins
+    avail_out_ref[...] = avail
+
+
+def decision_fused_padded(ke, ko, qe, qo, exec_pad, mask_pad, avail_pad, *,
+                          interpret: bool):
+    """All-padded entry: planes (1, M), exec f32[D, P_pad], mask/avail
+    f32[1, P_pad] (mask is additive: 0 on live lanes, +inf on masked)."""
+    M = ke.shape[-1]
+    D = 2 * M
+    P_pad = exec_pad.shape[-1]
+    kernel = functools.partial(_decision_kernel, M=M, D=D, P_pad=P_pad)
+    out_shape = [
+        jax.ShapeDtypeStruct((1, D), jnp.int32),
+        jax.ShapeDtypeStruct((1, D), jnp.int32),
+        jax.ShapeDtypeStruct((1, D), jnp.float32),
+        jax.ShapeDtypeStruct((1, D), jnp.float32),
+        jax.ShapeDtypeStruct((1, P_pad), jnp.float32),
+    ]
+    plane = pl.BlockSpec((1, M), lambda: (0, 0))
+    row = pl.BlockSpec((1, P_pad), lambda: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        in_specs=[
+            plane, plane, plane, plane,
+            pl.BlockSpec((D, P_pad), lambda: (0, 0)),
+            row, row,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, D), lambda: (0, 0)),
+            pl.BlockSpec((1, D), lambda: (0, 0)),
+            pl.BlockSpec((1, D), lambda: (0, 0)),
+            pl.BlockSpec((1, D), lambda: (0, 0)),
+            row,
+        ],
+        interpret=interpret,
+    )(ke, ko, qe, qo, exec_pad, mask_pad, avail_pad)

@@ -9,6 +9,8 @@ Public API
 ``oddeven_sort(keys, payload)``      — stable descending sort (priority queue)
 ``eft_select(exec_sorted, avail)``   — EFT assignment over a sorted queue
 ``heft_rt_hw(avg, exec, avail)``     — full fused mapping event (the overlay)
+``decision_hw(avg, exec, avail, pe_mask)`` — mapping event with in-kernel mask
+``interpret_default()``              — whether kernels lower or interpret here
 """
 
 from __future__ import annotations
@@ -19,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import eft_select as _eft
+from repro.kernels import fused_decision as _decision
 from repro.kernels import heft_fused as _fused
 from repro.kernels import oddeven_sort as _sort
 
@@ -27,9 +30,19 @@ _QUEUE_ALIGN = 256  # two 128-lane planes
 
 INF = float("inf")
 
+# Backends with a real Mosaic/Triton pallas lowering; everywhere else the
+# kernels run through the interpreter.  GPU was previously (wrongly) lumped
+# with CPU, silently interpreting on machines that could compile.
+_COMPILED_BACKENDS = ("tpu", "gpu")
 
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+
+def interpret_default() -> bool:
+    """True when pallas kernels would run in interpret mode on this host."""
+    return jax.default_backend() not in _COMPILED_BACKENDS
+
+
+# Backwards-compat alias (pre-PR-10 internal name, used by fabric/tests).
+_interpret_default = interpret_default
 
 
 def _round_up(x: int, m: int) -> int:
@@ -136,3 +149,43 @@ def heft_rt_hw(avg: jax.Array, exec_times: jax.Array, avail: jax.Array,
     if interpret is None:
         interpret = _interpret_default()
     return _heft_rt_hw_impl(avg, exec_times, avail, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _decision_hw_impl(avg, exec_times, avail, pe_mask, interpret: bool):
+    D0, P0 = exec_times.shape
+    D = max(_round_up(D0, _QUEUE_ALIGN), _QUEUE_ALIGN)
+    P_pad = max(_round_up(P0, _LANES), _LANES)
+    k = jnp.full((D,), float("-inf"), dtype=jnp.float32)
+    k = k.at[:D0].set(avg.astype(jnp.float32))
+    q = jnp.arange(D, dtype=jnp.int32)
+    ex = jnp.full((D, P_pad), INF, dtype=jnp.float32)
+    ex = ex.at[:D0, :P0].set(exec_times.astype(jnp.float32))
+    av = jnp.full((1, P_pad), INF, dtype=jnp.float32)
+    av = av.at[0, :P0].set(avail.astype(jnp.float32))
+    # Additive mask row: 0 on live lanes, +inf on masked lanes.  Padded
+    # lanes are already +inf in both exec and avail, so 0 there is fine.
+    mrow = jnp.zeros((1, P_pad), dtype=jnp.float32)
+    mrow = mrow.at[0, :P0].set(
+        jnp.where(pe_mask, jnp.float32(INF), jnp.float32(0.0)))
+    ke, ko = _split_planes(k)
+    qe, qo = _split_planes(q)
+    order, pes, sts, fins, new_avail = _decision.decision_fused_padded(
+        ke, ko, qe, qo, ex, mrow, av, interpret=interpret)
+    return (order[0, :D0], pes[0, :D0], sts[0, :D0], fins[0, :D0],
+            new_avail[0, :P0])
+
+
+def decision_hw(avg: jax.Array, exec_times: jax.Array, avail: jax.Array,
+                pe_mask: jax.Array, *, interpret: bool | None = None):
+    """One HEFT_RT mapping event with the PE mask applied inside the kernel.
+
+    Like :func:`heft_rt_hw` but takes a bool[P] ``pe_mask`` (True = lane
+    withheld from dispatch) that is applied as an additive +inf row at the
+    exec-LUT read — the device-resident masking contract of the ``fused``
+    fabric backend.  With an all-False mask this is bit-identical to
+    :func:`heft_rt_hw`.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    return _decision_hw_impl(avg, exec_times, avail, pe_mask, interpret)

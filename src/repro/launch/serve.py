@@ -80,6 +80,12 @@ def main() -> None:
                     help="with --paged: pool pages per replica (default: "
                          "full occupancy; lower exercises admission "
                          "queueing)")
+    ap.add_argument("--fused-scheduler", action="store_true",
+                    help="with --paged: run the HEFT_RT admission decision "
+                         "inside the decode tick's compiled program "
+                         "(MappingFabric backend='fused'; zero host "
+                         "scheduling round-trips at steady state — "
+                         "docs/scheduling.md)")
     ap.add_argument("--sharded", action="store_true",
                     help="back replicas with mesh slices of the device pool")
     ap.add_argument("--mesh-shapes", default="1x1",
@@ -126,17 +132,26 @@ def main() -> None:
                  for i, s in enumerate(speeds)]
 
     fabric = None
-    if args.trace:
-        # Route mapping events through an instrumented fabric: decision
+    if args.fused_scheduler and not args.paged:
+        raise SystemExit("--fused-scheduler requires --paged")
+    if args.trace or args.fused_scheduler:
+        # Route mapping events through a fabric: with --trace, decision
         # spans + the per-decision latency histogram + device-resident
-        # counters.  The numpy backend's decisions are bit-identical to the
-        # heft_rt_numpy path this launcher uses untraced.
+        # counters (the numpy backend's decisions are bit-identical to the
+        # heft_rt_numpy path this launcher uses untraced); with
+        # --fused-scheduler, the fused backend whose registers the paged
+        # decode tick consumes in-program (docs/scheduling.md).
         from repro.sched_integration.fabric import MappingFabric
 
-        fabric = MappingFabric(len(fleet), backend="numpy", tracer=tracer,
+        backend = "fused" if args.fused_scheduler else "numpy"
+        fabric = MappingFabric(len(fleet), backend=backend, tracer=tracer,
                                metrics=metrics, device_counters=True)
-        for r in fleet:
-            r.engine.tracer = tracer
+        if args.fused_scheduler:
+            log.info(f"fused scheduler: fabric backend={backend} "
+                     f"(effective {fabric.backend_effective})")
+        if args.trace:
+            for r in fleet:
+                r.engine.tracer = tracer
     front = HeftFrontEnd(fleet, fabric=fabric, tracer=tracer, metrics=metrics)
 
     rng = np.random.default_rng(0)
@@ -148,8 +163,14 @@ def main() -> None:
     if args.paged:
         # Continuous batching: requests join/leave the running batch at the
         # admission tick instead of queueing behind whole generations.
+        # Stagger arrivals so later requests land while decode ticks are in
+        # flight — the steady-state case the fused scheduler exists for
+        # (tick-0 arrivals are cold-start and take the host path).
+        arrivals = [min(i, 2 * args.new_tokens // 3)
+                    for i in range(len(requests))]
         (seqs, stats), dt = time_s(
-            front.run_continuous, requests, max_batch=args.max_batch,
+            front.run_continuous, requests, arrival_ticks=arrivals,
+            max_batch=args.max_batch,
             page_size=args.page_size, num_pages=args.num_pages)
         outs = [s[None, :] for s in seqs]      # run_batch-shaped, for demos
         counts = stats["processed"]
@@ -158,6 +179,10 @@ def main() -> None:
                  f"tok/s, {stats['ticks']} ticks, "
                  f"{stats['allocated']} pages allocated == "
                  f"{stats['freed']} freed)")
+        if args.fused_scheduler:
+            log.info(f"scheduling decisions: {stats['fused_decisions']} "
+                     f"fused in-tick, {stats['host_decisions']} host "
+                     f"(cold-start/idle)")
         oracle = front.replicas[0].engine.generate(requests[0][0][None, :],
                                                    requests[0][1])
         if not np.array_equal(outs[0], oracle):

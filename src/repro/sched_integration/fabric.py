@@ -21,9 +21,15 @@ the fabric*:
   the event stream never bounces them through host memory.
 * **Selectable backend.**  ``backend="jit"`` runs :func:`repro.core.heft_rt`
   (vmapped for batches); ``backend="pallas"`` runs the fused overlay kernel
-  :func:`repro.kernels.heft_rt_hw` (interpret-mode fallback off-TPU);
-  ``backend="numpy"`` is the oracle-exact host fast path used by the
-  discrete-event simulators, where events are tiny and sequential.
+  :func:`repro.kernels.heft_rt_hw` (compiled on TPU/GPU, interpret-mode
+  fallback elsewhere — logged once and visible via
+  :attr:`MappingFabric.backend_effective`); ``backend="fused"`` keeps the
+  PE mask device-resident too and exposes its registers to the paged decode
+  tick (see :meth:`MappingFabric.tick_decision_inputs`), so the HEFT_RT
+  decision can run *inside* the serving tick's compiled program with zero
+  host scheduling round-trips (docs/scheduling.md); ``backend="numpy"`` is
+  the oracle-exact host fast path used by the discrete-event simulators,
+  where events are tiny and sequential.
 * **Vectorized roofline front-end.**  :func:`service_time_matrix` computes
   the full (N, P) exec-time matrix in one vectorized op, replacing the
   per-request Python row loop (and unbounded per-rid cache) in the serving
@@ -51,7 +57,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.heft_rt import ScheduleResult, heft_rt
-from repro.kernels import heft_rt_hw
+from repro.kernels import decision_hw, heft_rt_hw
+from repro.kernels import interpret_default as _interpret_default
+from repro.kernels.fused_decision import decision_ref, unpack_decision
 from repro.obs.device import (
     NUM_COUNTERS,
     accumulate_counters,
@@ -59,10 +67,28 @@ from repro.obs.device import (
     counters_dict,
     zero_counters,
 )
+from repro.obs.log import get_logger
 
 _INF = float("inf")
 
-BACKENDS = ("numpy", "jit", "pallas")
+BACKENDS = ("numpy", "jit", "pallas", "fused")
+
+# Pallas-path fabrics warn exactly once per process when the kernels run in
+# interpret mode — the fallback is correct but ~1000x slower, and it used to
+# be silent (benchmarks "comparing" pallas were really timing the
+# interpreter).  ``backend_effective`` exposes the same fact queryably.
+_interp_warned = False
+
+
+def _warn_interpret_once(backend: str) -> None:
+    global _interp_warned
+    if _interp_warned:
+        return
+    _interp_warned = True
+    get_logger("fabric").warning(
+        "%s backend: no compiled pallas lowering on jax backend %r — "
+        "kernels run in interpret mode (correct, not fast); see "
+        "MappingFabric.backend_effective", backend, jax.default_backend())
 
 
 def _env_backend() -> str | None:
@@ -227,9 +253,12 @@ class MappingFabric:
         Initial number of PEs / replicas (the variable P axis).
     backend:
         ``"numpy"`` (oracle-exact host fast path), ``"jit"`` (persistent
-        jitted ``heft_rt``), ``"pallas"`` (fused overlay kernel,
-        interpret-mode off-TPU), or ``"auto"`` — numpy on CPU hosts, jit
-        when an accelerator backend is attached.
+        jitted ``heft_rt``), ``"pallas"`` (fused overlay kernel — compiled
+        on TPU/GPU, interpret-mode elsewhere), ``"fused"`` (device-resident
+        PE mask + registers shareable with the paged decode tick; overlay
+        kernel when a compiled lowering exists, the jnp twin otherwise), or
+        ``"auto"`` — numpy on CPU hosts, jit when an accelerator backend is
+        attached.
     min_bucket / max_bucket:
         Ready queues are padded to the next power of two in
         ``[min_bucket, max_bucket]``; exceeding ``max_bucket`` raises.
@@ -282,12 +311,38 @@ class MappingFabric:
         self._counters = None            # device registers / host accumulator
         self._p_valid = None             # real-lane mask at the P bucket
         self._pe_mask = None             # chaos-tier unreachable-lane mask
+        self._mask_dev = None            # fused backend: device mask register
+        self._stage_cache = {}           # fused tick staging buffer reuse
         self._shapes_seen: set = set()   # compiled-variant keys → retraces
         self._retraces = 0
         if self._device_counters:
             self._counters = (np.zeros(NUM_COUNTERS)
                               if backend == "numpy" else zero_counters())
+        if backend == "pallas" and self._interpret_resolved():
+            _warn_interpret_once(backend)
         self.reset(avail)
+
+    def _interpret_resolved(self) -> bool:
+        """Whether pallas kernels dispatched by this fabric interpret."""
+        if self._interpret is not None:
+            return bool(self._interpret)
+        return _interpret_default()
+
+    @property
+    def backend_effective(self) -> str:
+        """The path that actually runs, for benchmarks/tests to assert on.
+
+        ``"pallas-interpret"`` when the pallas backend has no compiled
+        lowering on this host (the previously *silent* fallback);
+        ``"fused-jnp"`` when the fused backend's decision runs as the
+        traced jnp twin instead of the overlay kernel; otherwise the
+        configured backend name.
+        """
+        if self.backend == "pallas" and self._interpret_resolved():
+            return "pallas-interpret"
+        if self.backend == "fused" and self._interpret_resolved():
+            return "fused-jnp"
+        return self.backend
 
     # -- availability registers ---------------------------------------------
 
@@ -309,6 +364,18 @@ class MappingFabric:
             # device so counted dispatches do not re-upload it per event.
             self._p_valid = jnp.asarray(
                 np.arange(self.p_bucket) < self.num_pes)
+            if self.backend == "fused":
+                # The PE mask is a device register too (padded lanes False —
+                # their exec columns are already +inf), so masked dispatch
+                # needs no host-side matrix copy and the mask can ride into
+                # the paged decode tick's compiled program.
+                self._mask_dev = jnp.asarray(self._pad_mask())
+
+    def _pad_mask(self) -> np.ndarray:
+        m = np.zeros(self.p_bucket, dtype=bool)
+        if self._pe_mask is not None:
+            m[: self.num_pes] = self._pe_mask
+        return m
 
     def _pad_avail(self, a) -> np.ndarray:
         pad = np.zeros(self.p_bucket, dtype=np.float32)
@@ -471,17 +538,22 @@ class MappingFabric:
         """
         if mask is None:
             self._pe_mask = None
-            return
-        m = np.asarray(mask, dtype=bool)
-        if m.shape != (self.num_pes,):
-            raise ValueError(
-                f"pe mask must have shape ({self.num_pes},), got {m.shape}")
-        self._pe_mask = m
+        else:
+            m = np.asarray(mask, dtype=bool)
+            if m.shape != (self.num_pes,):
+                raise ValueError(
+                    f"pe mask must have shape ({self.num_pes},), got {m.shape}")
+            self._pe_mask = m
+        if self.backend == "fused":
+            self._mask_dev = jnp.asarray(self._pad_mask())
 
     def _masked(self, exec_times):
         """Apply the PE mask (+inf columns); the unmasked path returns the
-        input untouched — no copy, bit-identical dispatch."""
-        if self._pe_mask is None:
+        input untouched — no copy, bit-identical dispatch.  The fused
+        backend never host-masks: its mask is a device register applied
+        inside the compiled dispatch (``where(mask, +inf, exec)``, the same
+        values this copy would produce)."""
+        if self._pe_mask is None or self.backend == "fused":
             return exec_times
         ex = np.array(exec_times, copy=True)
         ex[..., self._pe_mask] = _INF
@@ -554,7 +626,21 @@ class MappingFabric:
         # outputs are untouched.
         if self._event_fn_cached is None:
             counted = self._device_counters
-            if self.backend == "pallas":
+            if self.backend == "fused":
+                decide = self._fused_decide()
+
+                if counted:
+                    def counted_fused(avg, ex, avail, valid, mask, counters,
+                                      p_valid):
+                        res = decide(avg, ex, avail, valid, mask)
+                        return res, accumulate_counters(
+                            counters, res.assignment, res.new_avail, valid,
+                            p_valid)
+
+                    fn = jax.jit(counted_fused, donate_argnums=(2, 5))
+                else:
+                    fn = jax.jit(decide, donate_argnums=(2,))
+            elif self.backend == "pallas":
                 interp = self._interpret
 
                 if counted:
@@ -583,10 +669,40 @@ class MappingFabric:
             self._event_fn_cached = fn
         return self._event_fn_cached
 
+    def _fused_decide(self):
+        """The fused backend's per-event decision body: the overlay kernel
+        (:func:`repro.kernels.decision_hw`, in-kernel mask row) when a
+        compiled pallas lowering exists on this host; otherwise the
+        bit-identical jnp twin :func:`repro.kernels.fused_decision
+        .decision_ref` — interpret-mode pallas would be a latency own-goal,
+        and the twin traces straight into the decode tick's program."""
+        if not self._interpret_resolved():
+            def decide(avg, ex, avail, valid, mask):
+                del valid  # baked into the -inf-key / +inf-exec padding
+                return ScheduleResult(*decision_hw(avg, ex, avail, mask,
+                                                   interpret=False))
+            return decide
+        return decision_ref
+
     def _batch_fn(self):
         if self._batch_fn_cached is None:
             counted = self._device_counters
-            if self.backend == "pallas":
+            if self.backend == "fused":
+                decide = self._fused_decide()
+                inner = jax.vmap(decide, in_axes=(0, 0, 0, 0, None))
+
+                if counted:
+                    def counted_fused_b(avg, ex, avail, valid, mask, counters,
+                                        p_valid):
+                        res = inner(avg, ex, avail, valid, mask)
+                        return res, accumulate_counters(
+                            counters, res.assignment, res.new_avail, valid,
+                            p_valid)
+
+                    fn = jax.jit(counted_fused_b, donate_argnums=(2, 5))
+                else:
+                    fn = jax.jit(inner, donate_argnums=(2,))
+            elif self.backend == "pallas":
                 interp = self._interpret
                 inner = jax.vmap(
                     lambda a, e, v: ScheduleResult(*heft_rt_hw(a, e, v,
@@ -616,9 +732,21 @@ class MappingFabric:
 
     def _dispatch_event(self, fn, a_p, ex_p, av_in, valid):
         """Run one compiled dispatch, threading the device counter
-        registers through when enabled."""
+        registers (and, for the fused backend, the device mask register)
+        through when enabled."""
+        if self.backend == "fused":
+            if self._device_counters:
+                res, self._counters = fn(a_p, ex_p, av_in, valid,
+                                         self._mask_dev, self._counters,
+                                         self._p_valid)
+                return res
+            # Exclusive branches: exactly one dispatch runs per event, so
+            # av_in is donated exactly once (and the mask register is never
+            # in this jit's donate set).
+            return fn(a_p, ex_p, av_in, valid,  # repro: noqa[donation-after-use]
+                      self._mask_dev)  # repro: noqa[donation-after-use]
         if self._device_counters:
-            res, self._counters = fn(a_p, ex_p, av_in, valid,
+            res, self._counters = fn(a_p, ex_p, av_in, valid,  # repro: noqa[donation-after-use]
                                      self._counters, self._p_valid)
             return res
         # Exclusive else-branch of the counted call above — only one of the
@@ -794,6 +922,85 @@ class MappingFabric:
                 cap[pe] -= 1
                 remaining -= 1
         return out
+
+
+    # -- fused-tick register sharing ----------------------------------------
+    #
+    # The paged decode tick (serve/paging.py) inlines the HEFT_RT decision
+    # into its own compiled program; these two methods are the fabric's side
+    # of that contract.  The device registers (T_avail, PE mask, counter
+    # file) stay owned by the fabric — the tick borrows them for one
+    # dispatch and hands the donated results back — so every resident-state
+    # contract (resize carries registers bit-exact, set_pe_mask, drain_
+    # counters) keeps working unchanged while decisions ride the tick.
+
+    def tick_decision_inputs(self, avg, exec_times):
+        """Stage one mapping event for a fused decode tick.
+
+        Pads ``(avg, exec_times)`` to this fabric's buckets and returns
+        ``(a_p, ex_p, valid, avail, mask, counters, p_valid)`` — the padded
+        operands plus the live device registers for the tick's compiled
+        program to consume.  ``avail`` (and ``counters``) are the resident
+        buffers and will be *donated* to the tick: the caller must follow
+        up with :meth:`commit_tick_decision` on the tick's outputs before
+        the next dispatch.  ``counters``/``p_valid`` are ``None`` when the
+        fabric was built without ``device_counters``.  Fused backend only.
+        """
+        if self.backend != "fused":
+            raise ValueError(
+                f"tick fusion requires backend='fused', got {self.backend!r}")
+        avg = np.asarray(avg)
+        exec_times = np.asarray(exec_times)
+        self._check_p(exec_times)
+        n, P = exec_times.shape
+        D = self.bucket_size(n)
+        # Steady-state fast path: the padded staging buffers are reused
+        # across ticks (the jit boundary copies them into device memory
+        # synchronously at dispatch, so in-place refills are safe).  Only
+        # the live region changes between events of the same shape; the
+        # padding lanes were written once by _pad_event and are invariant.
+        cached = self._stage_cache.get((D, self.p_bucket))
+        if cached is None or cached[3] != (n, P):
+            a_p, ex_p, valid = self._pad_event(avg, exec_times)
+            self._stage_cache[(D, self.p_bucket)] = [a_p, ex_p, valid, (n, P)]
+        else:
+            a_p, ex_p, valid, _ = cached
+            a_p[:n] = np.where(np.isnan(avg),
+                               -_INF, np.asarray(avg, dtype=np.float32))
+            ex_p[:n, :P] = exec_times
+        self._note_shape(("event", D, self.p_bucket))
+        counted = self._device_counters
+        return (a_p, ex_p, valid, self._avail, self._mask_dev,
+                self._counters if counted else None,
+                self._p_valid if counted else None)
+
+    def commit_tick_decision(self, n: int, buf, new_avail, counters=None):
+        """Adopt a fused tick's decision outputs back into the fabric.
+
+        ``buf`` is the *host* copy of the tick's packed decision lanes —
+        :func:`repro.kernels.fused_decision.pack_tick_outputs`' layout with
+        the token prefix already sliced off (``order | assignment | start |
+        finish | new_avail`` as raw int32, float lanes bitcast).
+        ``new_avail`` is the program's *device-resident* register output
+        (it reuses the donated buffer, so residency is preserved with zero
+        copies) and becomes the live register file; ``counters``, when
+        given, the accumulated counter registers.  Returns the host-trimmed
+        ``(order, assignment, start, finish, new_avail)`` tuple — the
+        :meth:`map_event` contract for the ``n`` real queue slots,
+        recovered by zero-copy ``.view`` (bit-identical, no extra device
+        sync).
+        """
+        if self.backend != "fused":
+            raise ValueError(
+                f"tick fusion requires backend='fused', got {self.backend!r}")
+        self._events += 1
+        self._avail = new_avail
+        if counters is not None:
+            self._counters = counters
+        order, assignment, start, finish, avail = unpack_decision(
+            buf, self.p_bucket)
+        return (order[:n], assignment[:n], start[:n], finish[:n],
+                avail[: self.num_pes])
 
 
 def make_policy_fabric(backend: str | None = None, *, tracer=None,

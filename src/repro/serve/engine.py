@@ -289,12 +289,20 @@ class ServeEngine:
                    S0=int(np.asarray(prompt).size), new_tokens=new_tokens):
             return rt.admit(prompt, new_tokens)
 
-    def decode_tick(self) -> dict[int, int]:
-        """One decode step for every in-flight slot → {slot: new token}."""
+    def decode_tick(self, sched=None):
+        """One decode step for every in-flight slot → {slot: new token}.
+
+        ``sched`` (optional): a staged HEFT_RT mapping event ``(avg,
+        exec_times, fabric)`` for a fused-backend
+        :class:`~repro.sched_integration.fabric.MappingFabric` — the
+        decision runs *inside* the tick's compiled program against the
+        fabric's device-resident registers, and the call returns
+        ``(tokens, decision)`` instead (see ``PagedRuntime.decode_tick``
+        and docs/scheduling.md)."""
         rt = self._require_paged()
         with _span(self.tracer, "engine.decode_tick",
-                   active=len(rt.active_slots())):
-            return rt.decode_tick()
+                   active=len(rt.active_slots()), fused=sched is not None):
+            return rt.decode_tick(sched)
 
     def finished_slots(self) -> list[int]:
         """Slots whose generation completed and await :meth:`retire`."""
@@ -495,6 +503,40 @@ class HeftFrontEnd:
             r.avail_at = float(new_avail[i])
         return [(int(order[i]), int(assignment[i])) for i in range(n)]
 
+    # -- fused-scheduler helpers (docs/scheduling.md) -----------------------
+
+    def _fused_enabled(self, fused: bool | None) -> bool:
+        """Resolve ``run_continuous``'s ``fused`` knob: None follows the
+        attached fabric's backend; True demands a fused-backend fabric."""
+        is_fused = (self.fabric is not None
+                    and getattr(self.fabric, "backend", None) == "fused")
+        if fused is None:
+            return is_fused
+        if fused and not is_fused:
+            raise ValueError(
+                "fused=True requires a MappingFabric(backend='fused') "
+                f"front-end fabric, got "
+                f"{getattr(self.fabric, 'backend', None)!r}")
+        return bool(fused)
+
+    def _stage_event(self, requests: list[tuple[np.ndarray, int]]):
+        """(avg, exec_times) for one mapping event — the operand half of
+        :meth:`schedule`, reused by the fused tick path."""
+        ex = self.exec_estimates(requests)
+        return ex.mean(axis=1), ex
+
+    def _adopt_decision(self, n: int, decision):
+        """Turn a mapping-event 5-tuple into a plan, mirroring the fabric's
+        resident ``new_avail`` registers into the replica handles (the
+        fused-path twin of :meth:`schedule`'s bookkeeping)."""
+        order, assignment, _, _, new_avail = decision
+        new_avail = np.asarray(new_avail)
+        for i, r in enumerate(self.replicas):
+            r.avail_at = float(new_avail[i])
+        if self.tracer is not None:
+            self.tracer.counter("frontend.queue_depth", depth=n)
+        return [(int(order[i]), int(assignment[i])) for i in range(n)]
+
     def run_batch(self, requests: list[tuple[np.ndarray, int]]):
         """Schedule + execute, returning (outputs, per-replica counts)."""
         plan = self.schedule(requests)
@@ -518,7 +560,8 @@ class HeftFrontEnd:
     def run_continuous(self, requests: list[tuple[np.ndarray, int]], *,
                        arrival_ticks: list[int] | None = None,
                        max_batch: int = 8, page_size: int = 16,
-                       num_pages: int | None = None):
+                       num_pages: int | None = None,
+                       fused: bool | None = None):
         """Continuous batching: the admission tick the paper's scheduler
         needs to pay off on dynamic arrivals.
 
@@ -536,13 +579,34 @@ class HeftFrontEnd:
         request ``i`` becomes visible — the open-loop workload hook the
         paged-serve benchmark drives.
 
+        ``fused`` selects the zero-host-round-trip scheduling fast path
+        (default: on exactly when the attached fabric is
+        ``backend="fused"``): arrivals' HEFT_RT decisions run *inside* a
+        replica's decode-tick program against the fabric's device-resident
+        registers, riding the token transfer the tick already makes
+        (docs/scheduling.md).  Mapped requests join their queues one tick
+        later than the host path — a pipeline delay, not a drop; when no
+        replica has active slots to ride (cold start, idle fleet) the
+        decision takes the host path against the same resident registers.
+        Token streams stay bit-identical to ``generate`` either way.
+
         Returns ``(outputs, stats)``: outputs in request order, and stats
-        with ``ticks``, per-replica ``processed``, and the pools' cumulative
-        ``allocated`` / ``freed`` page counters (equal at drain).
+        with ``ticks``, per-replica ``processed``, the pools' cumulative
+        ``allocated`` / ``freed`` page counters (equal at drain), and the
+        ``fused_decisions`` / ``host_decisions`` split.
         """
         arrivals = arrival_ticks or [0] * len(requests)
         if len(arrivals) != len(requests):
             raise ValueError("arrival_ticks must match requests")
+        fused = self._fused_enabled(fused)
+        fused_decisions = host_decisions = 0
+        if fused:
+            # The fabric's register file becomes the source of truth for
+            # T_avail during the run; seed it from the handles once, then
+            # every decision (fused tick or idle-time host fallback) updates
+            # the resident registers and mirrors them back.
+            self.fabric.reset(np.array([r.avail_at for r in self.replicas],
+                                       dtype=np.float64))
         for r in self.replicas:
             if r.engine.paged is None:
                 r.engine.start_paged(max_batch=max_batch,
@@ -559,6 +623,7 @@ class HeftFrontEnd:
         queues: list[list[int]] = [[] for _ in self.replicas]   # req idx FIFO
         slot_of: dict[tuple[int, int], int] = {}    # (rep, slot) → req idx
         outputs: dict[int, np.ndarray] = {}
+        pending: list[int] = []     # fused path: arrived, not yet mapped
         tick = 0
         next_arrival = 0
         while len(outputs) < len(requests):
@@ -568,10 +633,32 @@ class HeftFrontEnd:
                    and arrivals[order[next_arrival]] <= tick):
                 batch.append(order[next_arrival])
                 next_arrival += 1
-            if batch:
-                plan = self.schedule([requests[i] for i in batch])
-                for req_i, rep_i in plan:
-                    queues[rep_i].append(batch[req_i])
+            carrier = None
+            if not fused:
+                if batch:
+                    plan = self.schedule([requests[i] for i in batch])
+                    for req_i, rep_i in plan:
+                        queues[rep_i].append(batch[req_i])
+            else:
+                pending.extend(batch)
+                if pending:
+                    # The decision rides the first replica that will run a
+                    # decode tick this round; with nothing in flight there
+                    # is no tick to ride — take the host path now (against
+                    # the same resident registers) so this tick admits.
+                    carrier = next(
+                        (i for i, r in enumerate(self.replicas)
+                         if r.engine.paged is not None
+                         and r.engine.paged.active_slots()), None)
+                    if carrier is None:
+                        avg, ex = self._stage_event(
+                            [requests[i] for i in pending])
+                        decision = self.fabric.map_event(avg, ex)
+                        plan = self._adopt_decision(len(pending), decision)
+                        host_decisions += len(pending)
+                        for req_i, rep_i in plan:
+                            queues[rep_i].append(pending[req_i])
+                        pending = []
             # 2. Admission tick: drain each mapped queue into free slots.
             for rep_i, r in enumerate(self.replicas):
                 while queues[rep_i]:
@@ -582,9 +669,23 @@ class HeftFrontEnd:
                         break
                     queues[rep_i].pop(0)
                     slot_of[(rep_i, slot)] = idx
-            # 3. Decode tick + retire finished slots.
+            # 3. Decode tick + retire finished slots.  On the fused path the
+            # carrier's tick also computes the pending arrivals' mapping
+            # inside its compiled program; the mapped requests reach their
+            # queues for the NEXT admission tick (a one-tick pipeline
+            # delay — the steady-state cost of zero host round-trips).
             for rep_i, r in enumerate(self.replicas):
-                r.engine.decode_tick()
+                if fused and pending and rep_i == carrier:
+                    avg, ex = self._stage_event(
+                        [requests[i] for i in pending])
+                    _, decision = r.engine.decode_tick((avg, ex, self.fabric))
+                    plan = self._adopt_decision(len(pending), decision)
+                    fused_decisions += len(pending)
+                    for req_i, rep_to in plan:
+                        queues[rep_to].append(pending[req_i])
+                    pending = []
+                else:
+                    r.engine.decode_tick()
                 for slot in r.engine.finished_slots():
                     idx = slot_of.pop((rep_i, slot))
                     outputs[idx] = r.engine.retire(slot)
@@ -596,6 +697,8 @@ class HeftFrontEnd:
             "allocated": sum(r.engine.paged.pool.allocated
                              for r in self.replicas),
             "freed": sum(r.engine.paged.pool.freed for r in self.replicas),
+            "fused_decisions": fused_decisions,
+            "host_decisions": host_decisions,
         }
         return [outputs[i] for i in range(len(requests))], stats
 

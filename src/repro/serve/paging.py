@@ -64,6 +64,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.tree_util import tree_map_with_path
 
+from repro.kernels.fused_decision import decision_ref, pack_tick_outputs
+from repro.obs.device import accumulate_counters
 from repro.sched_integration.fabric import pow2_bucket
 
 # Leaf classification by name — the same convention _cache_rule uses.
@@ -282,6 +284,32 @@ class PagedRuntime:
             # (host-sync-in-hot-path design rule; see repro.analysis).
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), pools
 
+        # The fused-scheduler tick: the HEFT_RT decision for the next
+        # admission batch runs INSIDE the same compiled program as the
+        # decode step, against the fabric's device-resident T_avail/mask
+        # registers (docs/scheduling.md).  Decode math is byte-for-byte the
+        # plain tick's; the decision outputs ride the token transfer the
+        # tick already makes, so steady-state serving schedules with zero
+        # extra host round-trips.
+        def tick_sched(params, pools, table, slot_ids, pos, tok,
+                       a_p, ex_p, valid, avail, mask):
+            toks, pools = tick(params, pools, table, slot_ids, pos, tok)
+            res = decision_ref(a_p, ex_p, avail, valid, mask)
+            # Tokens + decision leave the device as ONE packed int32 buffer
+            # (see pack_tick_outputs): per-output host syncs would cost more
+            # than the decision itself.  new_avail additionally rides out as
+            # the live register (donated buffer), never materialized.
+            return pack_tick_outputs(toks, res), pools, res.new_avail
+
+        def tick_sched_counted(params, pools, table, slot_ids, pos, tok,
+                               a_p, ex_p, valid, avail, mask, counters,
+                               p_valid):
+            toks, pools = tick(params, pools, table, slot_ids, pos, tok)
+            res = decision_ref(a_p, ex_p, avail, valid, mask)
+            counters = accumulate_counters(counters, res.assignment,
+                                           res.new_avail, valid, p_valid)
+            return pack_tick_outputs(toks, res), pools, res.new_avail, counters
+
         def admit_scatter(pools, dense, table_row, slot):
             """Place one request's freshly prefilled (B=1) dense cache into
             its reserved pages / state slot.  Tail table entries are the
@@ -327,6 +355,19 @@ class PagedRuntime:
                 tick,
                 in_shardings=(p_sh, pool_sh, None, None, None, None),
                 out_shardings=(None, pool_sh), donate_argnums=(1,))
+            # Scheduler operands replicate; the fabric's T_avail register
+            # file (arg 9) and counter file (arg 11) are donated so the
+            # registers stay device-resident across ticks.
+            self._tick_sched = jax.jit(
+                tick_sched,
+                in_shardings=(p_sh, pool_sh) + (None,) * 9,
+                out_shardings=(None, pool_sh, None),
+                donate_argnums=(1, 9))
+            self._tick_sched_counted = jax.jit(
+                tick_sched_counted,
+                in_shardings=(p_sh, pool_sh) + (None,) * 11,
+                out_shardings=(None, pool_sh, None, None),
+                donate_argnums=(1, 9, 11))
             self._admit_scatter = jax.jit(
                 admit_scatter,
                 in_shardings=(pool_sh, eng._cache_sh, None, None),
@@ -338,6 +379,9 @@ class PagedRuntime:
         else:
             self.pool.pools = jax.tree.map(jnp.asarray, self.pool.pools)
             self._tick = jax.jit(tick, donate_argnums=(1,))
+            self._tick_sched = jax.jit(tick_sched, donate_argnums=(1, 9))
+            self._tick_sched_counted = jax.jit(tick_sched_counted,
+                                               donate_argnums=(1, 9, 11))
             self._admit_scatter = jax.jit(admit_scatter, donate_argnums=(0,))
             self._restore_scatter = jax.jit(restore_scatter,
                                             donate_argnums=(0,))
@@ -396,16 +440,25 @@ class PagedRuntime:
         """Slots whose generation is complete and awaiting :meth:`retire`."""
         return sorted(s for s, rec in self.slots.items() if rec.done)
 
-    def decode_tick(self) -> dict[int, int]:
+    def decode_tick(self, sched=None):
         """One decode step for every active slot: gather pages → dense view
         → ``decode_step`` with per-row positions → scatter the written
         token.  Returns {slot: newly generated token}.  Lane count pads to
         the next power of two (scratch-slot lanes), so admissions change the
         compiled variant at most ``log2(max_batch)+1`` times.
+
+        ``sched``: optional staged HEFT_RT mapping event ``(avg,
+        exec_times, fabric)`` — a *fused-backend* :class:`repro.
+        sched_integration.fabric.MappingFabric` whose device registers the
+        tick consumes.  The decision runs inside the same compiled program
+        as the decode step (zero extra host round-trips; its outputs ride
+        the token transfer), and the return value becomes ``(tokens,
+        decision)`` with ``decision`` the fabric's ``map_event`` 5-tuple.
+        Decode math is byte-for-byte the plain tick's.
         """
         active = self.active_slots()
         if not active:
-            return {}
+            return {} if sched is None else ({}, None)
         B = pow2_bucket(len(active), 1)
         scratch = self.pool.scratch_slot
         lanes = active + [scratch] * (B - len(active))
@@ -417,18 +470,43 @@ class PagedRuntime:
             pos[i] = rec.write_pos
             tok[i, 0] = rec.tokens[-1]
         eng = self.engine
+        decision = None
         with eng._ctx():
-            toks, self.pool.pools = self._tick(
-                eng.params, self.pool.pools,
-                jnp.asarray(self.pool.table[slot_ids]),
-                jnp.asarray(slot_ids), jnp.asarray(pos), jnp.asarray(tok))
-            nxt = np.asarray(toks)
+            args = (eng.params, self.pool.pools,
+                    jnp.asarray(self.pool.table[slot_ids]),
+                    jnp.asarray(slot_ids), jnp.asarray(pos), jnp.asarray(tok))
+            if sched is None:
+                toks, self.pool.pools = self._tick(*args)
+                nxt = np.asarray(toks)
+            else:
+                avg, exec_times, fab = sched
+                n = len(avg)
+                (a_p, ex_p, valid, avail, mask,
+                 counters, p_valid) = fab.tick_decision_inputs(avg, exec_times)
+                if counters is None:
+                    packed, self.pool.pools, new_avail = self._tick_sched(
+                        *args, a_p, ex_p, valid, avail, mask)
+                    ctr = None
+                else:
+                    # Exclusive branch: only one tick variant dispatches, so
+                    # the staged operands feed exactly one donated call.
+                    (packed, self.pool.pools, new_avail,
+                     ctr) = self._tick_sched_counted(
+                        *args, a_p, ex_p, valid, avail, mask,  # repro: noqa[donation-after-use]
+                        counters, p_valid)
+                # The tick's single host sync: tokens and decision share one
+                # packed buffer (pack_tick_outputs); new_avail/ctr stay
+                # device-resident and are adopted back by the fabric.
+                buf = np.asarray(packed)
+                nxt = buf[:B]
+                decision = fab.commit_tick_decision(n, buf[B:], new_avail,
+                                                    ctr)
         out = {}
         for i, s in enumerate(active):
             t = int(nxt[i])
             self.slots[s].tokens.append(t)
             out[s] = t
-        return out
+        return out if sched is None else (out, decision)
 
     def retire(self, slot: int) -> np.ndarray:
         """Free the slot's pages and return the full (S0+new_tokens,) ids."""

@@ -1,0 +1,320 @@
+"""Fused-backend fabric + in-tick HEFT_RT decision: oracle bit-identity.
+
+Covers this PR's tentpole contracts (docs/scheduling.md):
+
+* the ``fused`` ``MappingFabric`` backend is decision-for-decision
+  bit-identical to ``heft_rt_numpy`` — including all-``+inf`` exec rows
+  (assignment ``-1``), duplicate priority keys (stable-sort ties), a PE
+  mask, and chained resident registers,
+* random interleavings of {``map_event``, ``set_pe_mask``, ``grow``,
+  ``shrink``, ``drain_counters``} track a host-side numpy mirror exactly
+  (registers, decisions, counters),
+* padded PE lanes are inert: no assignment ever lands on a lane ≥ num_pes
+  and resident registers are untouched by padding,
+* ``decision_hw`` (the Pallas overlay lowering, interpret mode off-TPU)
+  equals ``decision_ref`` equals the oracle,
+* ``pack_tick_outputs``/``unpack_decision`` round-trip bit-exactly (the
+  fused tick's single host transfer), ±inf included,
+* ``PagedRuntime.decode_tick(sched=...)`` returns decode tokens
+  byte-identical to the plain tick plus a decision equal to the oracle
+  chain, with device counters accumulated in-program,
+* ``HeftFrontEnd.run_continuous(fused=...)`` reproduces the dense oracle
+  token-for-token and the host-path run decision-for-decision,
+* ``backend_effective`` reports the lowering that actually ran.
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import heft_rt_numpy
+from repro.kernels import decision_hw
+from repro.kernels.fused_decision import (decision_ref, pack_tick_outputs,
+                                          unpack_decision)
+from repro.models.config import ModelConfig
+from repro.models.model import init_params
+from repro.sched_integration.fabric import BACKENDS, MappingFabric
+from repro.serve import HeftFrontEnd, ReplicaHandle, ServeEngine
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+CFG = ModelConfig(name="t", num_layers=2, d_model=32, num_heads=4,
+                  num_kv_heads=4, d_ff=64, vocab_size=64,
+                  param_dtype="float32", compute_dtype="float32")
+
+# Module-level lazy singletons instead of fixtures: the hypothesis fallback
+# shim wraps @given tests with a zero-arg signature (see tests/_hypothesis_
+# compat.py), so fixtures can't be injected into property tests.
+_CACHE: dict = {}
+
+
+def _params():
+    if "params" not in _CACHE:
+        _CACHE["params"] = init_params(jax.random.key(0), CFG)
+    return _CACHE["params"]
+
+
+def _oracle_engine():
+    if "oracle" not in _CACHE:
+        _CACHE["oracle"] = ServeEngine(CFG, _params(), max_len=32)
+    return _CACHE["oracle"]
+
+
+def _event(rng, n, p, inf_frac=0.15):
+    """Small-integer event: every finish time exact in f32 (the paper's
+    Fig. 3 bitwise requirement), with occasional all-inf rows."""
+    avg = rng.integers(0, 4, n).astype(np.float64)     # duplicate keys
+    ex = rng.integers(1, 16, (n, p)).astype(np.float64)
+    kill = rng.random(n) < inf_frac
+    ex[kill] = np.inf
+    return avg, ex
+
+
+# ---------------------------------------------------------------------------
+# fused backend standalone dispatch: oracle bit-identity
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000), p=st.integers(1, 9))
+def test_fused_map_event_bit_identical_to_oracle(seed, p):
+    rng = np.random.default_rng(seed)
+    fab = MappingFabric(p, backend="fused")
+    mirror = np.zeros(p)
+    for _ in range(4):
+        n = int(rng.integers(1, 20))
+        avg, ex = _event(rng, n, p)
+        got = fab.map_event(avg, ex)
+        want = heft_rt_numpy(avg, ex, mirror)
+        mirror = want[4]
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g, dtype=np.float64),
+                                          np.asarray(w, dtype=np.float64))
+
+
+@given(seed=st.integers(0, 10_000))
+def test_fused_random_op_interleaving_tracks_host_mirror(seed):
+    """{map_event, set_pe_mask, grow, shrink, drain_counters} interleavings:
+    the fused fabric's registers/decisions/counters equal a host-side numpy
+    fabric's at every step."""
+    rng = np.random.default_rng(seed)
+    p = int(rng.integers(2, 6))
+    fab = MappingFabric(p, backend="fused", device_counters=True)
+    ref = MappingFabric(p, backend="numpy", device_counters=True)
+    for _ in range(12):
+        op = rng.integers(0, 5)
+        if op == 0:
+            avg, ex = _event(rng, int(rng.integers(1, 12)), fab.num_pes)
+            got, want = fab.map_event(avg, ex), ref.map_event(avg, ex)
+            for g, w in zip(got, want):
+                np.testing.assert_array_equal(
+                    np.asarray(g, dtype=np.float64),
+                    np.asarray(w, dtype=np.float64))
+        elif op == 1 and fab.num_pes > 1:
+            mask = rng.random(fab.num_pes) < 0.4
+            mask = mask if mask.any() and not mask.all() else None
+            fab.set_pe_mask(mask)
+            ref.set_pe_mask(mask)
+        elif op == 2:
+            fab.grow(fab.num_pes + 1, avail=float(rng.integers(0, 5)))
+            ref.grow(ref.num_pes + 1, avail=fab.avail[-1])
+        elif op == 3 and fab.num_pes > 1:
+            keep = np.sort(rng.choice(fab.num_pes,
+                                      size=fab.num_pes - 1, replace=False))
+            fab.shrink(keep)
+            ref.shrink(keep)
+        else:
+            assert fab.drain_counters() == ref.drain_counters()
+        np.testing.assert_array_equal(fab.avail, ref.avail)
+    assert fab.drain_counters() == ref.drain_counters()
+
+
+def test_fused_padded_lane_inertness():
+    """num_pes=5 pads to an 8-lane bucket: assignments never land on lanes
+    ≥ 5, and padded-lane registers never leak into results."""
+    rng = np.random.default_rng(3)
+    fab = MappingFabric(5, backend="fused")
+    for _ in range(6):
+        avg, ex = _event(rng, 11, 5, inf_frac=0.3)
+        _, assignment, _, _, new_avail = fab.map_event(avg, ex)
+        assert new_avail.shape == (5,)
+        assert set(np.asarray(assignment)) <= set(range(5)) | {-1}
+
+
+def test_fused_masked_dispatch_equals_oracle_on_masked_matrix():
+    rng = np.random.default_rng(4)
+    fab = MappingFabric(4, backend="fused")
+    mask = np.array([False, True, False, True])
+    fab.set_pe_mask(mask)
+    mirror = np.zeros(4)
+    for _ in range(3):
+        avg, ex = _event(rng, 9, 4)
+        got = fab.map_event(avg, ex)
+        exm = ex.copy()
+        exm[:, mask] = np.inf
+        want = heft_rt_numpy(avg, exm, mirror)
+        mirror = want[4]
+        np.testing.assert_array_equal(np.asarray(got[1]), want[1])
+        np.testing.assert_array_equal(
+            np.asarray(got[4], dtype=np.float64), want[4])
+    # masked lanes' registers stayed resident
+    assert mirror[1] == 0.0 and mirror[3] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# kernels: decision_hw / decision_ref / pack round-trip
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000))
+def test_decision_hw_and_ref_equal_oracle(seed):
+    rng = np.random.default_rng(seed)
+    n, p = 8, 4
+    avg, ex = _event(rng, n, p)
+    avail = rng.integers(0, 8, p).astype(np.float64)
+    mask = rng.random(p) < 0.3
+    exm = ex.copy()
+    exm[:, mask] = np.inf
+    want = heft_rt_numpy(avg, exm, avail)
+    ref = decision_ref(jnp.asarray(avg, jnp.float32),
+                       jnp.asarray(ex, jnp.float32),
+                       jnp.asarray(avail, jnp.float32),
+                       jnp.ones(n, bool), jnp.asarray(mask))
+    hw = decision_hw(np.asarray(avg, np.float32),
+                     np.asarray(ex, np.float32),
+                     np.asarray(avail, np.float32), mask)
+    for got in (tuple(ref), tuple(hw)):
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g, dtype=np.float64),
+                                          np.asarray(w, dtype=np.float64))
+
+
+def test_pack_unpack_roundtrip_bit_exact():
+    """The single-transfer packing is a pure bit-move: ±inf and every
+    mantissa pattern survive the int32 bitcast round trip."""
+    rng = np.random.default_rng(0)
+    n, p = 6, 4
+    avg, ex = _event(rng, n, p, inf_frac=0.5)      # plenty of ±inf lanes
+    res = decision_ref(jnp.asarray(avg, jnp.float32),
+                       jnp.asarray(ex, jnp.float32),
+                       jnp.asarray(rng.random(p), jnp.float32),
+                       jnp.ones(n, bool), jnp.zeros(p, bool))
+    toks = jnp.asarray(rng.integers(0, 64, (3, 1)), jnp.int32)
+    buf = np.asarray(pack_tick_outputs(toks, res))
+    assert buf.dtype == np.int32
+    np.testing.assert_array_equal(buf[:3], np.asarray(toks).ravel())
+    order, assignment, start, finish, avail = unpack_decision(buf[3:], p)
+    np.testing.assert_array_equal(order, np.asarray(res.order))
+    np.testing.assert_array_equal(assignment, np.asarray(res.assignment))
+    np.testing.assert_array_equal(start, np.asarray(res.start_time))
+    np.testing.assert_array_equal(finish, np.asarray(res.finish_time))
+    np.testing.assert_array_equal(avail, np.asarray(res.new_avail))
+
+
+def test_backend_effective_reports_actual_lowering():
+    on_accel = jax.default_backend() in ("tpu", "gpu")
+    assert MappingFabric(4, backend="numpy").backend_effective == "numpy"
+    assert MappingFabric(4, backend="jit").backend_effective == "jit"
+    assert (MappingFabric(4, backend="pallas").backend_effective
+            == ("pallas" if on_accel else "pallas-interpret"))
+    assert (MappingFabric(4, backend="fused").backend_effective
+            == ("fused" if on_accel else "fused-jnp"))
+    assert "fused" in BACKENDS
+
+
+def test_tick_fusion_api_requires_fused_backend():
+    import pytest
+    fab = MappingFabric(4, backend="jit")
+    with pytest.raises(ValueError, match="fused"):
+        fab.tick_decision_inputs(np.zeros(2), np.ones((2, 4)))
+    with pytest.raises(ValueError, match="fused"):
+        fab.commit_tick_decision(2, np.zeros(20, np.int32), None)
+
+
+# ---------------------------------------------------------------------------
+# fused decode tick: tokens byte-identical, decision rides the transfer
+# ---------------------------------------------------------------------------
+
+def _paged_engine(max_len=32):
+    eng = ServeEngine(CFG, _params(), max_len=max_len)
+    eng.start_paged(max_batch=2, page_size=8)
+    return eng
+
+
+def test_decode_tick_sched_contract_and_counters():
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(1, CFG.vocab_size, 6).astype(np.int32)
+    fab = MappingFabric(4, backend="fused", device_counters=True)
+
+    eng = _paged_engine()
+    assert eng.admit(prompt, 8) is not None
+    plain_eng = _paged_engine()
+    assert plain_eng.admit(prompt, 8) is not None
+
+    mirror = np.zeros(4)
+    for step in range(6):
+        n = int(rng.integers(2, 10))
+        avg, ex = _event(rng, n, 4)
+        out, decision = eng.decode_tick((avg, ex, fab))
+        assert out == plain_eng.decode_tick()      # byte-identical decode
+        want = heft_rt_numpy(avg, ex, mirror)
+        mirror = want[4]
+        np.testing.assert_array_equal(np.asarray(decision[0]), want[0])
+        np.testing.assert_array_equal(np.asarray(decision[1]), want[1])
+        np.testing.assert_array_equal(
+            np.asarray(decision[4], dtype=np.float64), want[4])
+    ctr = fab.drain_counters()
+    assert ctr["events"] == 6 and ctr["decisions"] > 0
+    # empty-runtime fused tick: nothing active, no decision
+    idle = ServeEngine(CFG, _params(), max_len=32)
+    idle.start_paged(max_batch=2, page_size=8)
+    assert idle.decode_tick((np.zeros(2), np.ones((2, 4)), fab)) == ({}, None)
+
+
+def test_run_continuous_fused_matches_dense_oracle_and_host_path():
+    rng = np.random.default_rng(11)
+    reqs = []
+    for _ in range(6):
+        nt = int(rng.integers(1, 8))
+        s0 = int(rng.integers(2, 32 - nt))
+        reqs.append((rng.integers(1, CFG.vocab_size, s0).astype(np.int32),
+                     nt))
+    arrivals = [0, 0, 1, 2, 2, 4]
+
+    def fleet():
+        return [ReplicaHandle(f"replica{i}",
+                              ServeEngine(CFG, _params(), max_len=32),
+                              speed=s)
+                for i, s in enumerate([1.0, 0.7])]
+
+    fused_front = HeftFrontEnd(fleet(),
+                               fabric=MappingFabric(2, backend="fused",
+                                                    device_counters=True))
+    outs, stats = fused_front.run_continuous(
+        reqs, arrival_ticks=arrivals, max_batch=2, page_size=8, num_pages=8)
+    for i, (p, nt) in enumerate(reqs):
+        np.testing.assert_array_equal(
+            outs[i], _oracle_engine().generate(p[None], nt)[0])
+    assert stats["fused_decisions"] + stats["host_decisions"] == len(reqs)
+    assert stats["fused_decisions"] > 0        # steady-state path exercised
+    assert stats["allocated"] == stats["freed"]
+    assert fused_front.fabric.drain_counters()["decisions"] == len(reqs)
+
+    host_front = HeftFrontEnd(fleet())         # numpy-oracle host path
+    host_outs, host_stats = host_front.run_continuous(
+        reqs, arrival_ticks=arrivals, max_batch=2, page_size=8, num_pages=8)
+    for a, b in zip(outs, host_outs):
+        np.testing.assert_array_equal(a, b)
+    # identical placement: per-replica processed counts agree
+    assert stats["processed"] == host_stats["processed"]
+
+
+def test_run_continuous_fused_flag_validation():
+    import pytest
+    front = HeftFrontEnd([ReplicaHandle(
+        "r0", ServeEngine(CFG, _params(), max_len=32))])
+    with pytest.raises(ValueError, match="fused"):
+        front.run_continuous([(np.arange(1, 5, dtype=np.int32), 2)],
+                             fused=True, max_batch=2, page_size=8,
+                             num_pages=8)
